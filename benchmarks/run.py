@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2,roofline]
+    PYTHONPATH=src python -m benchmarks.run --fast   # smaller train budgets
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (fig4_attack, roofline, table1_entropy, table2_bits,
+                        table3_performance, table4_comm)
+
+SUITES = {
+    "table1": lambda fast: table1_entropy.run(),
+    "table2": lambda fast: table2_bits.run(),
+    "table3": lambda fast: table3_performance.run(
+        n_steps=30 if fast else 120),
+    "table4": lambda fast: table4_comm.run(),
+    "fig4": lambda fast: fig4_attack.run(n_steps=60 if fast else 250),
+    "roofline": lambda fast: roofline.run(),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(SUITES))
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    names = list(SUITES) if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        try:
+            SUITES[name](args.fast)
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"benchmark failures: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

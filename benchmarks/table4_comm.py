@@ -1,0 +1,82 @@
+"""Paper Table 4: communication cost under a realistic split deployment.
+
+For each method x bit-width we measure, per forward-pass transmission of
+the tinyllava boundary activations:
+
+  * transmitted bytes (the bit-packed CommPayload — ground truth),
+  * serialization + deserialization wall time (pickle, as in the paper),
+  * simulated wire time on a 1 Gbit/s client<->server link (the paper's
+    two-device LAN regime) and on a 50 GB/s TPU ICI link (our target).
+
+Reported per 100 batches to match the paper's units.
+"""
+from __future__ import annotations
+
+import pickle
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import QuantConfig, SplitConfig, wire_payload
+from repro.data.pipeline import make_pipeline
+from repro.models import transformer as tf
+from repro.models.layers.mlp import mlp_forward
+
+LAN_BPS = 1e9 / 8  # 1 Gbit/s in bytes/s
+ICI_BPS = 50e9
+
+BATCHES = 20
+SCALE = 100 / BATCHES  # report per 100 batches
+
+
+def run():
+    cfg = get_config("tinyllava").reduced()
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    pipe = make_pipeline(cfg, batch_size=8, seq_len=32, seed=0)
+    batches = [next(pipe) for _ in range(BATCHES)]
+    feats = []
+    for b in batches:
+        img = mlp_forward(params["connector"],
+                          jnp.asarray(b["image_embeds"], jnp.float32))
+        feats.append(img)
+
+    rows = {}
+    for method, bits in [("identity", 16), ("rdfsq", 2), ("nf", 2),
+                         ("rdfsq", 3), ("nf", 3), ("rdfsq", 4), ("nf", 4)]:
+        split = SplitConfig(quant=QuantConfig(method=method, bits=bits),
+                            learnable_codec=False)
+        total_bytes = 0
+        ser_time = 0.0
+        for h in feats:
+            payload = wire_payload(split, None, h)
+            arrays = [np.asarray(a) for a in payload.arrays()]
+            t0 = time.perf_counter()
+            blob = pickle.dumps(arrays, protocol=4)
+            _ = pickle.loads(blob)
+            ser_time += time.perf_counter() - t0
+            total_bytes += payload.wire_bytes()
+        lan_s = total_bytes / LAN_BPS
+        ici_s = total_bytes / ICI_BPS
+        comm_time_lan = (ser_time + lan_s) * SCALE
+        name = "original" if method == "identity" else method
+        rows[(method, bits)] = dict(mb=total_bytes * SCALE / 2 ** 20,
+                                    time_lan=comm_time_lan)
+        emit(f"table4/{name}_{bits}bit",
+             ser_time / BATCHES * 1e6,
+             f"amount_MB_per100={total_bytes * SCALE / 2 ** 20:.2f};"
+             f"time_s_per100_LAN={comm_time_lan:.4f};"
+             f"time_s_per100_ICI={(ser_time + ici_s) * SCALE:.4f}")
+
+    base = rows[("identity", 16)]["mb"]
+    red = 1 - rows[("rdfsq", 2)]["mb"] / base
+    emit("table4/reduction_2bit_vs_16bit", 0.0,
+         f"byte_reduction={red:.4f};paper_claims=0.875")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,5 @@
+from repro.attack.inversion import (attack_forward, init_attack_params,
+                                    reconstruction_loss, train_attack)
+
+__all__ = ["attack_forward", "init_attack_params", "reconstruction_loss",
+           "train_attack"]

@@ -1,0 +1,67 @@
+"""Checkpointing: pytree <-> .npz with path-keyed arrays (no orbax offline).
+
+Paths are '/'-joined key paths; dataclass TrainStates round-trip through
+their pytree form.  bfloat16 leaves are stored via a uint16 view (npz has
+no native bf16) and restored exactly.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16_TAG = "__bf16__"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save(path: str, tree: Any) -> None:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    arrays: Dict[str, np.ndarray] = {}
+    for p, leaf in flat:
+        key = _path_str(p)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            arrays[key + _BF16_TAG] = arr.view(np.uint16)
+        else:
+            arrays[key] = arr
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **arrays)
+
+
+def restore(path: str, template: Any) -> Any:
+    """Restore into the structure of ``template`` (same pytree)."""
+    with np.load(path) as data:
+        stored = {k: data[k] for k in data.files}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat:
+        key = _path_str(p)
+        if key + _BF16_TAG in stored:
+            arr = stored[key + _BF16_TAG].view(jnp.bfloat16)
+        elif key in stored:
+            arr = stored[key]
+        else:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                f"template {leaf.shape}")
+        leaves.append(jnp.asarray(arr))
+    return treedef.unflatten(leaves)

@@ -1,0 +1,51 @@
+"""Architecture registry: 10 assigned architectures + the paper's own model.
+
+Each module defines ``CONFIG``; ``get_config(name)`` returns it and
+``ARCHS`` lists all ids.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ArchConfig
+
+ARCHS = (
+    "llama3_2_3b",
+    "llava_next_34b",
+    "musicgen_large",
+    "deepseek_coder_33b",
+    "zamba2_2_7b",
+    "minicpm3_4b",
+    "deepseek_v2_236b",
+    "arctic_480b",
+    "granite_3_8b",
+    "rwkv6_7b",
+    "tinyllava",
+)
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+_ALIASES.update({
+    "llama3.2-3b": "llama3_2_3b",
+    "llava-next-34b": "llava_next_34b",
+    "musicgen-large": "musicgen_large",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "minicpm3-4b": "minicpm3_4b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "arctic-480b": "arctic_480b",
+    "granite-3-8b": "granite_3_8b",
+    "rwkv6-7b": "rwkv6_7b",
+})
+
+
+def get_config(name: str) -> ArchConfig:
+    key = _ALIASES.get(name, name)
+    if key not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ALIASES)}")
+    mod = importlib.import_module(f"repro.configs.{key}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {a: get_config(a) for a in ARCHS}

@@ -1,0 +1,22 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual
+[hf:Snowflake/snowflake-arctic-base]."""
+from repro.configs.base import ArchConfig, default_split
+
+CONFIG = ArchConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=4864,           # dense-residual MLP width
+    vocab_size=32000,
+    rope_theta=10000.0,
+    sliding_window=4096,
+    n_experts=128,
+    moe_top_k=2,
+    moe_d_ff=4864,
+    dense_residual=True,
+    split=default_split(cut_layer=17),
+    source="hf:Snowflake/snowflake-arctic-base",
+)

@@ -1,0 +1,17 @@
+"""deepseek-coder-33b [dense] — llama-arch [arXiv:2401.14196]."""
+from repro.configs.base import ArchConfig, default_split
+
+CONFIG = ArchConfig(
+    name="deepseek-coder-33b",
+    family="dense",
+    n_layers=62,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=19200,
+    vocab_size=32256,
+    rope_theta=100000.0,
+    sliding_window=4096,
+    split=default_split(cut_layer=31),
+    source="arXiv:2401.14196 (DeepSeek-Coder 33B)",
+)

@@ -1,0 +1,32 @@
+"""deepseek-v2-236b [moe, MLA] [arXiv:2405.04434].
+
+MLA kv_lora=512; 2 shared + 160 routed experts, top-6, expert d_ff=1536;
+first layer dense (d_ff=12288 per model card).
+"""
+from repro.configs.base import ArchConfig, default_split
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=12288,          # dense first layer / shared-path width basis
+    vocab_size=102400,
+    rope_theta=10000.0,
+    sliding_window=4096,
+    attn_type="mla",
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    n_experts=160,
+    moe_top_k=6,
+    moe_d_ff=1536,
+    n_shared_experts=2,
+    first_dense_layers=1,
+    split=default_split(cut_layer=30),
+    source="arXiv:2405.04434 (DeepSeek-V2)",
+)

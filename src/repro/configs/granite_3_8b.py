@@ -1,0 +1,17 @@
+"""granite-3-8b [dense] — GQA [hf:ibm-granite/granite-3.0-2b-base family]."""
+from repro.configs.base import ArchConfig, default_split
+
+CONFIG = ArchConfig(
+    name="granite-3-8b",
+    family="dense",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=12800,
+    vocab_size=49155,
+    rope_theta=10000.0,
+    sliding_window=4096,
+    split=default_split(cut_layer=20),
+    source="hf:ibm-granite/granite-3.0-2b-base (8B per assignment)",
+)

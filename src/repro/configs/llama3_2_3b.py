@@ -1,0 +1,17 @@
+"""llama3.2-3b [dense] — small llama3 [hf:meta-llama/Llama-3.2-1B family]."""
+from repro.configs.base import ArchConfig, default_split
+
+CONFIG = ArchConfig(
+    name="llama3.2-3b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=128256,
+    rope_theta=500000.0,
+    sliding_window=4096,  # engaged only for long_500k (see DESIGN.md)
+    split=default_split(cut_layer=14),
+    source="hf:meta-llama/Llama-3.2-1B (scaled to 3B per assignment)",
+)

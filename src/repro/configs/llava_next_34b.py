@@ -1,0 +1,29 @@
+"""llava-next-34b [vlm] — anyres tiling backbone.
+
+The SigLIP/CLIP vision tower is a stub (input_specs supplies patch
+embeddings at d_vision); the 2-layer GELU connector + decoder backbone are
+fully implemented.  The paper's split cut sits right after the connector —
+cut_layer=0 puts the compressor between the connector and the first decoder
+layer, which is exactly the Quantized-TinyLLaVA deployment.
+2880 image tokens model anyres 4-tile + base encoding (5 x 576).
+"""
+from repro.configs.base import ArchConfig, default_split
+
+CONFIG = ArchConfig(
+    name="llava-next-34b",
+    family="vlm",
+    modality="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab_size=64000,
+    rope_theta=5000000.0,
+    sliding_window=4096,
+    n_image_tokens=2880,
+    d_vision=1152,
+    d_connector=7168,
+    split=default_split(cut_layer=0),  # paper-faithful: cut after connector
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf (34B-scale backbone)",
+)

@@ -1,0 +1,28 @@
+"""minicpm3-4b [dense, MLA] [hf:openbmb/MiniCPM3-4B].
+
+Multi-head Latent Attention with q_lora=768, kv_lora=256 (per the
+MiniCPM3-4B model card); assignment's "GQA kv=40" corresponds to MLA's
+full-head effective KV.
+"""
+from repro.configs.base import ArchConfig, default_split
+
+CONFIG = ArchConfig(
+    name="minicpm3-4b",
+    family="dense",
+    n_layers=62,
+    d_model=2560,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=6400,
+    vocab_size=73448,
+    rope_theta=10000.0,
+    sliding_window=4096,
+    attn_type="mla",
+    q_lora_rank=768,
+    kv_lora_rank=256,
+    qk_nope_dim=64,
+    qk_rope_dim=32,
+    v_head_dim=64,
+    split=default_split(cut_layer=31),
+    source="hf:openbmb/MiniCPM3-4B",
+)

@@ -1,0 +1,25 @@
+"""musicgen-large [audio] — decoder-only over EnCodec tokens [arXiv:2306.05284].
+
+EnCodec itself is a stub: input_specs supplies the 4-codebook token grid
+(delay-pattern flattening is a data-layout question for the stubbed
+frontend).  The decoder embeds the 4 codebooks additively and predicts all
+4 per step (4 output heads).
+"""
+from repro.configs.base import ArchConfig, default_split
+
+CONFIG = ArchConfig(
+    name="musicgen-large",
+    family="audio",
+    modality="audio",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=2048,
+    rope_theta=10000.0,
+    sliding_window=4096,
+    n_codebooks=4,
+    split=default_split(cut_layer=24),
+    source="arXiv:2306.05284 (MusicGen-large)",
+)

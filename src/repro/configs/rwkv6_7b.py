@@ -1,0 +1,23 @@
+"""rwkv6-7b [ssm] — Finch, data-dependent decay, attention-free
+[arXiv:2404.05892].
+
+The split-quantization technique applies to the cut hidden states exactly
+as for attention archs (DESIGN.md SS4); decode is O(1)-state so long_500k
+runs natively.
+"""
+from repro.configs.base import ArchConfig, default_split
+
+CONFIG = ArchConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,          # d_model / rwkv_head_dim
+    n_kv_heads=64,
+    d_ff=14336,
+    vocab_size=65536,
+    attn_type="none",
+    rwkv_head_dim=64,
+    split=default_split(cut_layer=16),
+    source="arXiv:2404.05892 (RWKV6 Finch 7B)",
+)

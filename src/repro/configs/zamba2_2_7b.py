@@ -1,0 +1,27 @@
+"""zamba2-2.7b [hybrid] — Mamba2 backbone + parameter-shared attention
+blocks every 6 layers [arXiv:2411.15242].
+
+The shared block consumes concat(hidden, initial embedding) through a
+2d->d input projection (simplification of Zamba2's concatenation scheme;
+see DESIGN.md).  ssm_state=64 per assignment.
+"""
+from repro.configs.base import ArchConfig, default_split
+
+CONFIG = ArchConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=80,
+    d_ff=10240,
+    vocab_size=32000,
+    rope_theta=10000.0,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_headdim=64,
+    hybrid_attn_every=6,
+    split=default_split(cut_layer=27),
+    source="arXiv:2411.15242 (Zamba2-2.7B)",
+)

@@ -1,0 +1,14 @@
+"""Core — the paper's contribution: compression + split-learning boundary."""
+from repro.core.payload import CommPayload, bits_per_scalar
+from repro.core.quantizers import QuantConfig, decode, encode, roundtrip
+from repro.core.split import (SplitConfig, analytic_bits_per_scalar,
+                              compressor_roundtrip, init_codec_params,
+                              quantized_ship, wire_payload)
+from repro.core import entropy, packing
+
+__all__ = [
+    "CommPayload", "bits_per_scalar", "QuantConfig", "encode", "decode",
+    "roundtrip", "SplitConfig", "compressor_roundtrip", "init_codec_params",
+    "quantized_ship", "wire_payload", "analytic_bits_per_scalar", "entropy",
+    "packing",
+]

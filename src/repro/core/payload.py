@@ -1,0 +1,64 @@
+"""CommPayload — what actually crosses the client/server wire.
+
+A registered pytree whose array leaves are exactly the tensors transmitted
+between split-learning partitions.  ``wire_bytes`` is the ground truth for
+every communication-cost number in EXPERIMENTS.md (paper Table 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CommPayload:
+    """Quantized activation payload.
+
+    Attributes
+    ----------
+    data:
+        The main payload.  For FSQ/RD-FSQ/NF-b this is the *bit-packed*
+        uint8 code words; for Top-K it is the kept values (fp16); for the
+        identity (original-model) path it is the raw bf16 activations.
+    scales:
+        Per-block / per-sample scale information (fp16 or uint8 when double
+        quantized).  None when the method needs none.
+    aux:
+        Everything else on the wire (block minima, double-quant group scales,
+        top-k indices, ...), keyed by name.
+    meta:
+        Static metadata (shape, bits, method) — NOT transmitted as a tensor;
+        in a real deployment it is part of the session handshake.
+    """
+
+    data: jnp.ndarray
+    scales: Optional[jnp.ndarray] = None
+    aux: Dict[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
+    meta: Dict[str, Any] = dataclasses.field(
+        default_factory=dict, metadata=dict(static=True)
+    )
+
+    def wire_bytes(self) -> int:
+        """Total bytes on the wire for this payload."""
+        total = self.data.size * self.data.dtype.itemsize
+        if self.scales is not None:
+            total += self.scales.size * self.scales.dtype.itemsize
+        for v in self.aux.values():
+            total += v.size * v.dtype.itemsize
+        return int(total)
+
+    def arrays(self) -> Tuple[jnp.ndarray, ...]:
+        out = [self.data]
+        if self.scales is not None:
+            out.append(self.scales)
+        out.extend(self.aux.values())
+        return tuple(out)
+
+
+def bits_per_scalar(payload: CommPayload, n_scalars: int) -> float:
+    """Average transmitted bits per original activation scalar (Table 2)."""
+    return payload.wire_bytes() * 8.0 / float(n_scalars)

@@ -1,0 +1,8 @@
+"""Compression methods for split-learning activation transmission."""
+from repro.core.quantizers.base import (QuantConfig, decode, encode, methods,
+                                        roundtrip)
+
+# registration side-effects
+from repro.core.quantizers import fsq, identity, nf, rdfsq, topk  # noqa: F401, E402
+
+__all__ = ["QuantConfig", "encode", "decode", "roundtrip", "methods"]

@@ -1,0 +1,115 @@
+"""Quantizer API + registry.
+
+Every compression method in the paper is exposed through three pure
+functions, dispatched on ``QuantConfig.method``:
+
+``encode(cfg, x, rng)   -> CommPayload``
+    Wire form: bit-packed integer codes + scale side-info.  This is what the
+    split-learning client transmits (paper Table 4 measures exactly this).
+
+``decode(cfg, payload)  -> x_hat``
+    Server-side reconstruction from the wire form.
+
+``roundtrip(cfg, x, rng) -> (x_hat, aux_loss)``
+    Differentiable in-graph quantize->dequantize with the straight-through
+    estimator, used for end-to-end training (paper Table 3) and for the
+    40-combo dry-runs.  ``aux_loss`` is RD-FSQ's commitment loss (0 for all
+    other methods).
+
+All three agree numerically: ``decode(cfg, encode(cfg, x, rng)) ==
+roundtrip(cfg, x, rng)[0]`` (tested property).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.payload import CommPayload
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static configuration for one compression method instance."""
+
+    method: str = "rdfsq"  # fsq | rdfsq | nf | topk | identity
+    bits: int = 2  # d = 2**bits discrete levels
+    # --- NF-b (QLoRA) ---
+    block_size: int = 64  # G in Algorithm 3
+    double_quant: bool = True  # 8-bit quantization of block scales
+    dq_group: int = 256  # blocks per double-quant group
+    # --- RD-FSQ ---
+    commit_alpha: float = 0.25  # alpha weighting L_comm
+    clip_sigma: float = 3.0  # mu +- 3 sigma outlier clip
+    # --- Randomized Top-K ---
+    rand_frac: float = 0.25  # fraction of the budget spent on random picks
+    # --- shared ---
+    stats_axis: str = "sample"  # 'sample' (per batch row) | 'tensor'
+
+    @property
+    def levels(self) -> int:
+        return 2 ** self.bits
+
+
+_ENCODERS: Dict[str, Callable] = {}
+_DECODERS: Dict[str, Callable] = {}
+_ROUNDTRIPS: Dict[str, Callable] = {}
+
+
+def register(method: str, encode_fn, decode_fn, roundtrip_fn) -> None:
+    _ENCODERS[method] = encode_fn
+    _DECODERS[method] = decode_fn
+    _ROUNDTRIPS[method] = roundtrip_fn
+
+
+def encode(cfg: QuantConfig, x: jnp.ndarray,
+           rng: Optional[jax.Array] = None) -> CommPayload:
+    return _ENCODERS[cfg.method](cfg, x, rng)
+
+
+def decode(cfg: QuantConfig, payload: CommPayload) -> jnp.ndarray:
+    return _DECODERS[cfg.method](cfg, payload)
+
+
+def roundtrip(cfg: QuantConfig, x: jnp.ndarray,
+              rng: Optional[jax.Array] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return _ROUNDTRIPS[cfg.method](cfg, x, rng)
+
+
+def methods() -> Tuple[str, ...]:
+    return tuple(sorted(_ENCODERS))
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def stats_axes(cfg: QuantConfig, ndim: int):
+    """Axes over which scaling statistics are computed.
+
+    'sample': one scale set per leading-batch row (what crosses the wire is
+    then 2 fp16 scalars per sample — negligible); 'tensor': a single global
+    scale set.
+    """
+    if cfg.stats_axis == "sample":
+        return tuple(range(1, ndim))
+    if cfg.stats_axis == "tensor":
+        return tuple(range(ndim))
+    raise ValueError(f"unknown stats_axis {cfg.stats_axis!r}")
+
+
+def symmetric_round(e: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Paper Algorithms 1/2 lines 3-6: round e in [-1,1] to d levels.
+
+    Returns z on the symmetric grid; for even d the grid is half-integer
+    ({-(d-1)/2, ..., -0.5, 0.5, ..., (d-1)/2}).
+    """
+    half = (d - 1) / 2.0
+    if d % 2 == 1:
+        z = jnp.round(half * e)
+    else:
+        z = jnp.round(half * e - 0.5) + 0.5
+    return jnp.clip(z, -half, half)

@@ -1,0 +1,72 @@
+"""FSQ — Finite Scalar Quantization (paper Algorithm 1, Mentzer et al. 2023).
+
+tanh scaling + symmetric rounding; STE for gradients.  This is the baseline
+the paper's RD-FSQ improves on (tanh saturation -> codebook under-use).
+
+Note on Algorithm 1 line 11: the paper prints ``C = (I - (d-1)/2) / (d-1)``
+which does not invert line 9 (it would halve the range).  Algorithm 2 line 9
+uses ``/ ((d-1)/2)`` for the identical construction, so we use that
+(reconstruction back onto [-1, 1]) for both — an acknowledged erratum.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.payload import CommPayload
+from repro.core.quantizers import base
+from repro.utils.tree import ste
+
+_ATANH_CLIP = 1.0 - 1e-4
+
+
+def _quantize(cfg: base.QuantConfig, x: jnp.ndarray):
+    d = cfg.levels
+    half = (d - 1) / 2.0
+    e = jnp.tanh(x.astype(jnp.float32))
+    z = base.symmetric_round(e, d)
+    idx = (z + half).astype(jnp.uint8)  # I in {0, ..., d-1}
+    return e, z, idx
+
+
+def _reconstruct(cfg: base.QuantConfig, idx: jnp.ndarray) -> jnp.ndarray:
+    d = cfg.levels
+    half = (d - 1) / 2.0
+    c = (idx.astype(jnp.float32) - half) / half  # back onto [-1, 1]
+    # Fixed (non-learnable) inverse of the tanh encode; when a learnable
+    # codec wraps the quantizer (Figure 2) the linear decoder refines this.
+    return jnp.arctanh(jnp.clip(c, -_ATANH_CLIP, _ATANH_CLIP))
+
+
+def encode(cfg: base.QuantConfig, x: jnp.ndarray,
+           rng: Optional[jax.Array] = None) -> CommPayload:
+    _, _, idx = _quantize(cfg, x)
+    words = packing.pack_bits(idx, cfg.bits)
+    return CommPayload(
+        data=words,
+        meta=dict(method="fsq", bits=cfg.bits, shape=tuple(x.shape),
+                  dtype=str(x.dtype)),
+    )
+
+
+def decode(cfg: base.QuantConfig, payload: CommPayload) -> jnp.ndarray:
+    shape = payload.meta["shape"]
+    n = 1
+    for s in shape:
+        n *= s
+    idx = packing.unpack_bits(payload.data, cfg.bits, n).reshape(shape)
+    return _reconstruct(cfg, idx).astype(payload.meta.get("dtype", "float32"))
+
+
+def roundtrip(cfg: base.QuantConfig, x: jnp.ndarray,
+              rng: Optional[jax.Array] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    _, _, idx = _quantize(cfg, x)
+    x_hat = _reconstruct(cfg, idx).astype(x.dtype)
+    return ste(x, x_hat), jnp.zeros((), jnp.float32)
+
+
+base.register("fsq", encode, decode, roundtrip)

@@ -1,0 +1,32 @@
+"""Identity compressor — the paper's "Original Model" 16-bit baseline."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.payload import CommPayload
+from repro.core.quantizers import base
+
+
+def encode(cfg: base.QuantConfig, x: jnp.ndarray,
+           rng: Optional[jax.Array] = None) -> CommPayload:
+    return CommPayload(
+        data=x.astype(jnp.bfloat16),
+        meta=dict(method="identity", bits=16, shape=tuple(x.shape),
+                  dtype=str(x.dtype)),
+    )
+
+
+def decode(cfg: base.QuantConfig, payload: CommPayload) -> jnp.ndarray:
+    return payload.data.astype(payload.meta.get("dtype", "float32"))
+
+
+def roundtrip(cfg: base.QuantConfig, x: jnp.ndarray,
+              rng: Optional[jax.Array] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return x.astype(jnp.bfloat16).astype(x.dtype), jnp.zeros((), jnp.float32)
+
+
+base.register("identity", encode, decode, roundtrip)

@@ -1,0 +1,106 @@
+"""Randomized Top-K sparsification (Zheng et al., IJCAI 2023) — baseline.
+
+Per sample, the K highest-magnitude activation scalars are kept
+deterministically; a further ``rand_frac * K`` slots are spent on uniform
+random picks from the remainder (scaled by 1/p for unbiasedness) to preserve
+representation diversity.  Everything else is zeroed.
+
+The K budget is derived from the configured bit-width so methods are
+comparable at equal wire cost: the paper's Table 2 counts Top-K at 16K/H
+bits/scalar, so ``K = bits * H / 16``.
+
+Static shapes throughout (required for jit): the random picks are realized
+with a Gumbel-top-k over noise restricted to the non-top-k set.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.payload import CommPayload
+from repro.core.quantizers import base
+from repro.utils.tree import ste
+
+_NEG = -1e30
+
+
+def budget(cfg: base.QuantConfig, h: int) -> Tuple[int, int]:
+    """(deterministic K, randomized K) for feature size ``h``."""
+    k_total = max(1, int(round(cfg.bits * h / 16.0)))
+    k_total = min(k_total, h)
+    k_rand = int(round(k_total * cfg.rand_frac))
+    k_det = max(1, k_total - k_rand)
+    k_rand = min(k_rand, h - k_det)
+    return k_det, k_rand
+
+
+def _select(cfg: base.QuantConfig, x: jnp.ndarray,
+            rng: Optional[jax.Array]):
+    b = x.shape[0]
+    flat = x.astype(jnp.float32).reshape(b, -1)
+    h = flat.shape[1]
+    k_det, k_rand = budget(cfg, h)
+    mag = jnp.abs(flat)
+    det_vals, det_idx = jax.lax.top_k(mag, k_det)
+    det_mask = jnp.zeros_like(flat).at[
+        jnp.arange(b)[:, None], det_idx].set(1.0)
+
+    if k_rand > 0:
+        if rng is None:
+            rng = jax.random.PRNGKey(0)
+        noise = jax.random.uniform(rng, flat.shape)
+        noise = jnp.where(det_mask > 0, _NEG, noise)
+        _, rnd_idx = jax.lax.top_k(noise, k_rand)  # uniform w/o replacement
+        p = k_rand / max(1, h - k_det)
+        rnd_scale = 1.0 / p
+    else:
+        rnd_idx = jnp.zeros((b, 0), jnp.int32)
+        rnd_scale = 1.0
+    idx = jnp.concatenate([det_idx, rnd_idx], axis=-1)
+    gathered = jnp.take_along_axis(flat, idx, axis=-1)
+    scale = jnp.concatenate(
+        [jnp.ones((k_det,)), jnp.full((rnd_idx.shape[1],), rnd_scale)])
+    vals = gathered * scale  # unbiased estimate
+    return idx.astype(jnp.int32), vals, h
+
+
+def _scatter(idx: jnp.ndarray, vals: jnp.ndarray, shape) -> jnp.ndarray:
+    b = idx.shape[0]
+    h = 1
+    for s in shape[1:]:
+        h *= s
+    out = jnp.zeros((b, h), jnp.float32)
+    out = out.at[jnp.arange(b)[:, None], idx].set(vals.astype(jnp.float32))
+    return out.reshape(shape)
+
+
+def encode(cfg: base.QuantConfig, x: jnp.ndarray,
+           rng: Optional[jax.Array] = None) -> CommPayload:
+    idx, vals, _ = _select(cfg, x, rng)
+    return CommPayload(
+        data=vals.astype(jnp.float16),
+        aux=dict(indices=idx),
+        meta=dict(method="topk", bits=cfg.bits, shape=tuple(x.shape),
+                  dtype=str(x.dtype)),
+    )
+
+
+def decode(cfg: base.QuantConfig, payload: CommPayload) -> jnp.ndarray:
+    shape = payload.meta["shape"]
+    out = _scatter(payload.aux["indices"],
+                   payload.data.astype(jnp.float32), shape)
+    return out.astype(payload.meta.get("dtype", "float32"))
+
+
+def roundtrip(cfg: base.QuantConfig, x: jnp.ndarray,
+              rng: Optional[jax.Array] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    idx, vals, _ = _select(cfg, x, rng)
+    vals16 = vals.astype(jnp.float16).astype(jnp.float32)
+    x_hat = _scatter(idx, vals16, x.shape).astype(x.dtype)
+    return ste(x, x_hat), jnp.zeros((), jnp.float32)
+
+
+base.register("topk", encode, decode, roundtrip)

@@ -1,0 +1,161 @@
+"""Split-learning boundary: compressor module + cross-partition transport.
+
+Figure 2 of the paper: the compressor is an (optional, learnable) linear
+encoder on the client, a quantizer, the wire, a dequantizer, and an
+(optional, learnable) linear decoder on the server.  Two execution modes:
+
+* ``compressor_roundtrip`` — in-graph quantize->dequantize with STE, used for
+  end-to-end training (paper Table 3) and for the 40-combo dry-runs, where
+  client and server halves are co-located SPMD programs.
+* ``quantized_ship`` — the real wire: encode to the bit-packed payload,
+  ``jax.lax.ppermute`` every payload array across the ``pod`` mesh axis,
+  decode on the receiving pod.  A ``custom_vjp`` ships the (uncompressed,
+  per the paper's forward-only compression scope) cotangent back on the
+  reverse permutation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizers
+from repro.core.payload import CommPayload
+from repro.core.quantizers import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitConfig:
+    """Where and how the model is cut."""
+
+    cut_layer: int = -1  # boundary index into the block stack; -1 = L // 2
+    quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
+    learnable_codec: bool = True  # Figure-2 linear encoder/decoder
+    enabled: bool = True
+
+    def resolve_cut(self, n_layers: int) -> int:
+        cut = self.cut_layer if self.cut_layer >= 0 else n_layers // 2
+        return min(max(cut, 0), n_layers)
+
+
+# ---------------------------------------------------------------------------
+# learnable linear codec (Figure 2 client encoder / server decoder)
+# ---------------------------------------------------------------------------
+
+def init_codec_params(key: jax.Array, d_model: int,
+                      dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    """Near-identity init so the cut is transparent at step 0."""
+    k1, k2 = jax.random.split(key)
+    eye = jnp.eye(d_model, dtype=dtype)
+    noise = 0.01 / (d_model ** 0.5)
+    return dict(
+        enc_w=eye + noise * jax.random.normal(k1, (d_model, d_model), dtype),
+        enc_b=jnp.zeros((d_model,), dtype),
+        dec_w=eye + noise * jax.random.normal(k2, (d_model, d_model), dtype),
+        dec_b=jnp.zeros((d_model,), dtype),
+    )
+
+
+def client_encode_pre(params: Optional[Dict], cfg: SplitConfig,
+                      x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.learnable_codec and params is not None:
+        return x @ params["enc_w"].astype(x.dtype) + \
+            params["enc_b"].astype(x.dtype)
+    return x
+
+
+def server_decode_post(params: Optional[Dict], cfg: SplitConfig,
+                       x_hat: jnp.ndarray) -> jnp.ndarray:
+    if cfg.learnable_codec and params is not None:
+        return x_hat @ params["dec_w"].astype(x_hat.dtype) + \
+            params["dec_b"].astype(x_hat.dtype)
+    return x_hat
+
+
+# ---------------------------------------------------------------------------
+# in-graph mode (end-to-end training / dry-run)
+# ---------------------------------------------------------------------------
+
+def compressor_roundtrip(params: Optional[Dict], cfg: SplitConfig,
+                         x: jnp.ndarray,
+                         rng: Optional[jax.Array] = None
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full Figure-2 path with the wire replaced by identity.
+
+    Returns (server-side feature, commitment loss).
+    """
+    if not cfg.enabled or cfg.quant.method == "none":
+        return x, jnp.zeros((), jnp.float32)
+    h = client_encode_pre(params, cfg, x)
+    h_hat, commit = quantizers.roundtrip(cfg.quant, h, rng)
+    y = server_decode_post(params, cfg, h_hat)
+    return y, commit
+
+
+# ---------------------------------------------------------------------------
+# wire mode (true cross-pod transfer)
+# ---------------------------------------------------------------------------
+
+def _tree_ppermute(tree, axis_name: str, perm):
+    return jax.tree_util.tree_map(
+        lambda a: jax.lax.ppermute(a, axis_name, perm), tree)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 2, 3, 4))
+def quantized_ship(cfg: QuantConfig, x: jnp.ndarray, axis_name: str,
+                   perm: Tuple[Tuple[int, int], ...],
+                   bwd_cfg: Optional[QuantConfig] = None) -> jnp.ndarray:
+    """Quantize -> pack -> ppermute across ``axis_name`` -> decode.
+
+    Only the *packed* payload crosses the link, which is why the collective
+    bytes in the lowered HLO shrink by ~16/bits vs shipping bf16.
+
+    ``bwd_cfg`` (BEYOND-PAPER, EXPERIMENTS.md SSPerf D): the paper limits
+    compression to the forward pass and returns the cotangent at full
+    precision; passing a QuantConfig here quantizes + packs the gradient
+    on the reverse permutation too, compressing the backward wire by the
+    same ratio.
+    """
+    payload = quantizers.encode(cfg, x)
+    shipped = _tree_ppermute(payload, axis_name, list(perm))
+    return quantizers.decode(cfg, shipped)
+
+
+def _ship_fwd(cfg, x, axis_name, perm, bwd_cfg):
+    return quantized_ship(cfg, x, axis_name, perm, bwd_cfg), None
+
+
+def _ship_bwd(cfg, axis_name, perm, bwd_cfg, _res, g):
+    rev = [(dst, src) for (src, dst) in perm]
+    if bwd_cfg is None:
+        # Paper scope: the cotangent returns uncompressed.
+        return (jax.lax.ppermute(g, axis_name, rev),)
+    payload = quantizers.encode(bwd_cfg, g)
+    shipped = _tree_ppermute(payload, axis_name, rev)
+    return (quantizers.decode(bwd_cfg, shipped),)
+
+
+quantized_ship.defvjp(_ship_fwd, _ship_bwd)
+
+
+def wire_payload(cfg: SplitConfig, params: Optional[Dict], x: jnp.ndarray,
+                 rng: Optional[jax.Array] = None) -> CommPayload:
+    """Client-side wire form (for byte accounting / Table 4 benchmarks)."""
+    h = client_encode_pre(params, cfg, x)
+    return quantizers.encode(cfg.quant, h, rng)
+
+
+def analytic_bits_per_scalar(q: QuantConfig, h_dim: int) -> float:
+    """Paper Table 2 closed forms."""
+    if q.method in ("fsq", "rdfsq", "nf"):
+        return float(q.bits)
+    if q.method == "topk":
+        from repro.core.quantizers.topk import budget
+        k_det, k_rand = budget(q, h_dim)
+        return 16.0 * (k_det + k_rand) / h_dim
+    if q.method == "identity":
+        return 16.0
+    raise ValueError(q.method)

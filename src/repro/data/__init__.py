@@ -1,0 +1,4 @@
+from repro.data.pipeline import (PipelineConfig, SyntheticPipeline,
+                                 make_pipeline)
+
+__all__ = ["PipelineConfig", "SyntheticPipeline", "make_pipeline"]

@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for the Pallas compressor kernels.
+
+Independent re-implementations of the kernel math (they deliberately do
+not share code with the kernels); every kernel test asserts allclose /
+exact-match against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import pack_bits, storage_bits, unpack_bits
+
+_EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# RD-FSQ (clip -> linear scale -> symmetric round -> pack)
+# ---------------------------------------------------------------------------
+
+def rdfsq_stats(x2d: jnp.ndarray, clip_sigma: float = 3.0):
+    """Per-row (lo, hi) after the mu +- k*sigma clip.  x2d: (R, C)."""
+    xf = x2d.astype(jnp.float32)
+    mu = xf.mean(axis=1, keepdims=True)
+    sd = xf.std(axis=1, keepdims=True)
+    xc = jnp.clip(xf, mu - clip_sigma * sd, mu + clip_sigma * sd)
+    return xc.min(axis=1, keepdims=True), xc.max(axis=1, keepdims=True)
+
+
+def rdfsq_codes_ref(x2d: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+                    bits: int) -> jnp.ndarray:
+    """(R, C) codes in {0..2^bits - 1} (uint8, pre-packing)."""
+    d = 2 ** bits
+    half = (d - 1) / 2.0
+    xf = jnp.clip(x2d.astype(jnp.float32), lo, hi)
+    e = 2.0 * (xf - lo) / (hi - lo + _EPS) - 1.0
+    if d % 2 == 1:
+        z = jnp.round(half * e)
+    else:
+        z = jnp.round(half * e - 0.5) + 0.5
+    z = jnp.clip(z, -half, half)
+    return (z + half).astype(jnp.uint8)
+
+
+def rdfsq_quantize_ref(x2d, lo, hi, bits: int) -> jnp.ndarray:
+    """Packed uint8 words, row-major packing per row: (R, C*b/8)."""
+    codes = rdfsq_codes_ref(x2d, lo, hi, bits)
+    r, c = codes.shape
+    per = 8 // storage_bits(bits)
+    return jax.vmap(lambda row: pack_bits(row, bits))(codes).reshape(
+        r, c // per)
+
+
+def rdfsq_dequantize_ref(packed: jnp.ndarray, lo, hi, bits: int,
+                         n_cols: int) -> jnp.ndarray:
+    d = 2 ** bits
+    half = (d - 1) / 2.0
+    r = packed.shape[0]
+    codes = jax.vmap(lambda row: unpack_bits(row, bits, n_cols))(packed)
+    cvals = (codes.astype(jnp.float32) - half) / half
+    return (cvals + 1.0) / 2.0 * (hi - lo) + lo
+
+
+# ---------------------------------------------------------------------------
+# NF-b blockwise quantization
+# ---------------------------------------------------------------------------
+
+def nf_codes_ref(blocks: jnp.ndarray, book: jnp.ndarray):
+    """blocks: (NB, G).  Returns (codes uint8, m (NB,1), rng (NB,1))."""
+    xf = blocks.astype(jnp.float32)
+    m = xf.min(axis=1, keepdims=True)
+    mx = xf.max(axis=1, keepdims=True)
+    rng = mx - m
+    norm = 2.0 * (xf - m) / (rng + 1e-8) - 1.0
+    dist = jnp.abs(norm[..., None] - book.astype(jnp.float32))
+    codes = jnp.argmin(dist, axis=-1).astype(jnp.uint8)
+    return codes, m, rng
+
+
+def nf_quantize_ref(blocks, book, bits: int):
+    codes, m, rng = nf_codes_ref(blocks, book)
+    nb, g = codes.shape
+    per = 8 // storage_bits(bits)
+    packed = jax.vmap(lambda row: pack_bits(row, bits))(codes).reshape(
+        nb, g // per)
+    return packed, m, rng
+
+
+def nf_dequantize_ref(packed, m, rng, book, bits: int,
+                      g: int) -> jnp.ndarray:
+    codes = jax.vmap(lambda row: unpack_bits(row, bits, g))(packed)
+    norm = book.astype(jnp.float32)[codes]
+    return (norm + 1.0) / 2.0 * rng + m

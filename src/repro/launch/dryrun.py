@@ -1,0 +1,273 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+MUST be imported/executed before any other jax usage: the first two lines
+force 512 host platform devices so ``jax.make_mesh`` can build the
+production meshes (2x16x16 multi-pod, 16x16 single-pod) on this CPU-only
+container.
+
+Per combo it records:
+  * compiled.memory_analysis()    (proves the program fits per-device HBM)
+  * compiled.cost_analysis()      (HLO FLOPs / bytes for the roofline)
+  * collective bytes parsed from the partitioned HLO (hlo_analysis)
+  * derived roofline terms (launch/roofline.py)
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json; the
+benchmarks/roofline harness and EXPERIMENTS.md tables read from there.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_2_3b \
+        --shape train_4k [--multi-pod] [--fsdp {auto,on,off}]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.launch import shapes as shp
+from repro.launch.hlo_analysis import analyze as hlo_analyze
+from repro.launch.hlo_analysis import count_op
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.launch.roofline import derive_roofline, model_flops
+from repro.models import transformer as tf
+from repro.optim import AdamWConfig
+from repro.serve.decode import make_serve_step
+from repro.sharding import (batch_pspecs, cache_pspecs, mesh_axes,
+                            param_pspecs, state_pspecs)
+from repro.sharding import ctx as shard_ctx
+from repro.train.loop import init_state, make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# Per-arch memory policy (the "fits in HBM" knobs; see EXPERIMENTS.md §Perf)
+BF16_MOMENTS = {"arctic_480b", "deepseek_v2_236b"}
+SERVE_FSDP = {"arctic_480b", "deepseek_v2_236b"}
+TRAIN_ACCUM = 8  # microbatches per step (global 256 -> 8 x 32)
+# giant MoE configs trade collective traffic (more FSDP regathers) for
+# activation memory (EXPERIMENTS.md SSPerf A7)
+TRAIN_ACCUM_OVERRIDE = {"deepseek_v2_236b": 16, "arctic_480b": 16}
+# two-level remat only where per-device activation memory binds (it costs
+# collective traffic; EXPERIMENTS.md SSPerf A8/C2)
+REMAT_GROUP = {"llava_next_34b": 8, "deepseek_coder_33b": 8,
+               "arctic_480b": 6, "rwkv6_7b": 8, "minicpm3_4b": 8,
+               "deepseek_v2_236b": 8}
+# int8 KV cache (beyond-paper, SSPerf D5) where the decode cache footprint
+# exceeds per-device HBM at bf16
+KV8 = {"deepseek_coder_33b", "llava_next_34b", "musicgen_large",
+       "arctic_480b"}
+
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_lowerable(arch: str, shape_name: str, mesh, *,
+                    fsdp: Optional[bool] = None):
+    """Returns (jitted_fn, arg ShapeDtypeStructs tuple)."""
+    cfg = get_config(arch)
+    shape = shp.SHAPES[shape_name]
+    win = shp.window_for(cfg, shape)
+    axes = mesh_axes(mesh)
+    dp = dp_axes(mesh)
+    shard_ctx.install(dp, axes=axes)
+    specs = shp.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        if arch in REMAT_GROUP:
+            cfg = dataclasses.replace(cfg, remat_group=REMAT_GROUP[arch])
+        use_fsdp = True if fsdp is None else fsdp
+        opt_cfg = AdamWConfig(
+            moment_dtype="bfloat16" if arch in BF16_MOMENTS else "float32")
+        accum = TRAIN_ACCUM_OVERRIDE.get(arch, TRAIN_ACCUM)
+        step = make_train_step(cfg, opt_cfg, window=win,
+                               grad_accum=accum,
+                               accum_dtype="bfloat16")
+        state_sds = jax.eval_shape(
+            lambda: init_state(jax.random.PRNGKey(0), cfg, opt_cfg))
+        rng_sds = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+        st_specs = state_pspecs(state_sds, axes, fsdp=use_fsdp)
+        shard_ctx.set_param_specs(st_specs.params)
+        in_sh = (_named(mesh, st_specs),
+                 _named(mesh, batch_pspecs(specs["batch"], dp, axes)),
+                 NamedSharding(mesh, P()))
+        fn = jax.jit(step, in_shardings=in_sh, donate_argnums=(0,))
+        donated = sum(x.size * x.dtype.itemsize for x in
+                      jax.tree_util.tree_leaves(state_sds))
+        return fn, (state_sds, specs["batch"], rng_sds), donated
+
+    use_fsdp = (arch in SERVE_FSDP) if fsdp is None else fsdp
+    if shape.kind in ("decode", "prefill") and arch in KV8 \
+            and cfg.attn_type == "gqa":
+        cfg = dataclasses.replace(cfg, kv_cache_bits=8)
+        specs = shp.input_specs(cfg, shape)  # rebuild with int8 cache
+    params_sds = jax.eval_shape(
+        lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+    p_specs = param_pspecs(params_sds, axes, fsdp=use_fsdp)
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            logits, aux, caches = tf.forward(
+                params, cfg, batch, window=win,
+                collect_cache=shape.seq_len)
+            return logits[:, -1], caches
+
+        in_sh = (_named(mesh, p_specs),
+                 _named(mesh, batch_pspecs(specs["batch"], dp, axes)))
+        fn = jax.jit(prefill_step, in_shardings=in_sh)
+        return fn, (params_sds, specs["batch"]), 0
+
+    # decode
+    serve = make_serve_step(cfg, window=win)
+    c_specs = cache_pspecs(specs["caches"], dp, axes)
+    from repro.sharding.specs import _dp_or_none
+    in_sh = (_named(mesh, p_specs),
+             _named(mesh, c_specs),
+             _named(mesh, batch_pspecs(specs["batch"], dp, axes)),
+             NamedSharding(mesh, P(_dp_or_none(axes, dp, shape.batch))))
+    fn = jax.jit(serve, in_shardings=in_sh, donate_argnums=(1,))
+    donated = sum(x.size * x.dtype.itemsize for x in
+                  jax.tree_util.tree_leaves(specs["caches"]))
+    return fn, (params_sds, specs["caches"], specs["batch"],
+                specs["qpos"]), donated
+
+
+def _donated_per_device(compiled, donated_global: int, chips: int) -> int:
+    """Estimate per-device donated bytes (global / chips; the donated
+    buffers — train state and decode caches — are sharded by our specs)."""
+    return donated_global // max(chips, 1)
+
+
+def _mem_dict(mem) -> Dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        out[k] = int(getattr(mem, k, -1))
+    out["peak_bytes_per_device"] = (
+        out["argument_size_in_bytes"] + out["output_size_in_bytes"] +
+        out["temp_size_in_bytes"] - max(out["alias_size_in_bytes"], 0))
+    return out
+
+
+def _cost_dict(cost) -> Dict:
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return {k: float(v) for k, v in dict(cost).items()
+            if isinstance(v, (int, float))}
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
+               fsdp: Optional[bool] = None, save: bool = True,
+               verbose: bool = True) -> Dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    shape = shp.SHAPES[shape_name]
+    fn, args, donated_global = build_lowerable(arch, shape_name, mesh,
+                                               fsdp=fsdp)
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = _mem_dict(compiled.memory_analysis())
+    # XLA:CPU does not implement buffer donation; on TPU the donated input
+    # (train state / decode caches) aliases the matching output.  Report the
+    # donation-adjusted peak alongside the raw one.
+    n_chips_tmp = mesh.devices.size
+    donated_per_dev = donated_global and _donated_per_device(
+        compiled, donated_global, n_chips_tmp)
+    mem["donated_bytes_per_device_est"] = int(donated_per_dev or 0)
+    mem["peak_adjusted_per_device"] = (
+        mem["peak_bytes_per_device"] - int(donated_per_dev or 0))
+    cost = _cost_dict(compiled.cost_analysis())
+    hlo = compiled.as_text()
+    hl = hlo_analyze(hlo)  # loop-aware per-device totals
+    cost["flops_loop_aware"] = hl["dot_flops"]
+    cost["bytes_out_loop_aware"] = hl["bytes_out"]
+    n_chips = mesh.devices.size
+    result = dict(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=n_chips,
+        kind=shape.kind,
+        fsdp=bool(fsdp) if fsdp is not None else None,
+        memory=mem, cost=cost,
+        collective_bytes_per_device=hl["collective_bytes"],
+        collective_by_op=hl["collective_by_op"],
+        collective_op_counts=hl["collective_counts"],
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        hlo_bytes=len(hlo),
+    )
+    result["model_flops"] = model_flops(cfg, shape)
+    result["roofline"] = derive_roofline(result)
+    if verbose:
+        rl = result["roofline"]
+        print(f"[{arch} x {shape_name} x {mesh_name}] "
+              f"peak/dev={mem['peak_bytes_per_device']/2**30:.2f}GiB "
+              f"flops/dev={cost.get('flops', 0):.3e} "
+              f"coll/dev={hl['collective_bytes']/2**20:.1f}MiB "
+              f"dominant={rl['dominant']} "
+              f"(compile {t_compile:.1f}s)")
+        print("  memory_analysis:", json.dumps(mem))
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        path = os.path.join(
+            RESULTS_DIR, f"{arch}__{shape_name}__{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(shp.SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all 10 assigned archs x 4 shapes")
+    ap.add_argument("--fsdp", default="auto", choices=["auto", "on", "off"])
+    args = ap.parse_args()
+
+    fsdp = None if args.fsdp == "auto" else (args.fsdp == "on")
+    assigned = [a for a in ARCHS if a != "tinyllava"]
+    archs = assigned if args.all or args.arch is None else [args.arch]
+    shapes = list(shp.SHAPES) if args.all or args.shape is None \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                try:
+                    dryrun_one(arch, shape_name, multi_pod=mp, fsdp=fsdp)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape_name, mp, repr(e)))
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh definitions (TPU v5e pods).
+
+Functions, not module-level constants, so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS *before* any jax
+initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12  # per chip, FLOP/s
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for CPU tests (requires host-device override)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axis group: ('pod','data') on multi-pod meshes."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,124 @@
+"""Roofline derivation from dry-run artifacts (deliverable g).
+
+Three terms, all in seconds, per (arch, shape, mesh):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s_per_chip
+    memory     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective = collective_bytes_per_device / ICI_bw_per_chip
+
+cost_analysis() runs on the GSPMD-partitioned per-device module, so its
+flops/bytes are already per-chip — dividing by per-chip peaks is exactly
+the brief's "global / (chips x peak)".
+
+MODEL_FLOPS = 6 * N * D with N = active non-embedding params (MoE: shared +
+top_k routed), D = tokens processed by the step.  The ratio
+MODEL_FLOPS / (HLO_FLOPs * chips) measures how much compiled compute is
+"useful" — remat recompute, masked attention waste, and MoE capacity
+overprovisioning all push it below 1.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models.layers.mamba2 import dims as mamba_dims
+
+
+def param_counts(cfg: ArchConfig) -> Dict[str, float]:
+    """Analytic parameter counts (total, active, embedding)."""
+    d = cfg.d_model
+    embed = cfg.vocab_size * d * (cfg.n_codebooks or 1)
+    head = d * cfg.vocab_size * (cfg.n_codebooks or 1)
+
+    def attn_params() -> float:
+        if cfg.attn_type == "mla":
+            qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+            p = cfg.kv_lora_rank * cfg.n_heads * (cfg.qk_nope_dim +
+                                                  cfg.v_head_dim)
+            p += d * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+            if cfg.q_lora_rank:
+                p += d * cfg.q_lora_rank + \
+                    cfg.q_lora_rank * cfg.n_heads * qk
+            else:
+                p += d * cfg.n_heads * qk
+            p += cfg.n_heads * cfg.v_head_dim * d
+            return p
+        hd = cfg.head_dim
+        return d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+
+    def swiglu(f):
+        return 3 * d * f
+
+    total = 0.0
+    active = 0.0
+    for t in cfg.block_pattern():
+        if t == "dense":
+            p = attn_params() + swiglu(cfg.d_ff)
+            total += p
+            active += p
+        elif t == "moe":
+            a = attn_params()
+            expert = swiglu(cfg.moe_d_ff or cfg.d_ff)
+            shared = swiglu(cfg.n_shared_experts * (cfg.moe_d_ff or cfg.d_ff)
+                            ) if cfg.n_shared_experts else 0
+            dense_res = swiglu(cfg.d_ff) if cfg.dense_residual else 0
+            total += a + cfg.n_experts * expert + shared + dense_res
+            active += a + cfg.moe_top_k * expert + shared + dense_res
+        elif t == "mamba2":
+            d_inner, nheads, conv_dim = mamba_dims(
+                d, cfg.ssm_expand, cfg.ssm_headdim, cfg.ssm_state)
+            p = d * (2 * d_inner + 2 * cfg.ssm_state + nheads) + \
+                4 * conv_dim + d_inner * d + d_inner
+            total += p
+            active += p
+        elif t == "rwkv6":
+            p = 5 * d * d + d * cfg.d_ff * 2 + d * d  # tmix + cmix
+            total += p
+            active += p
+        elif t == "shared_attn":
+            # parameters shared across occurrences: count once in total,
+            # every occurrence in active (they all execute)
+            p = 2 * d * d + attn_params() + swiglu(cfg.d_ff)
+            active += p
+    if "shared_attn" in cfg.block_pattern():
+        total += 2 * d * d + attn_params() + swiglu(cfg.d_ff)
+    return dict(total=total + embed + head, active=active + head,
+                embedding=embed, non_embedding_total=total + head)
+
+
+def model_flops(cfg: ArchConfig, shape) -> float:
+    """6 * N_active * D (forward+backward for train; 2*N*D for inference)."""
+    counts = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq_len
+        return 6.0 * counts["active"] * tokens
+    if shape.kind == "prefill":
+        tokens = shape.batch * shape.seq_len
+        return 2.0 * counts["active"] * tokens
+    tokens = shape.batch  # one token per sequence
+    return 2.0 * counts["active"] * tokens
+
+
+def derive_roofline(result: Dict) -> Dict:
+    cost = result["cost"]
+    # loop-aware totals from the HLO walk (cost_analysis counts while
+    # bodies once); fall back to raw cost_analysis when absent.
+    flops_dev = float(cost.get("flops_loop_aware") or cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes_out_loop_aware")
+                      or cost.get("bytes accessed", 0.0))
+    coll_dev = float(result["collective_bytes_per_device"])
+    chips = result["chips"]
+    compute_s = flops_dev / PEAK_FLOPS_BF16
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / ICI_BW
+    terms = dict(compute=compute_s, memory=memory_s, collective=collective_s)
+    dominant = max(terms, key=terms.get)
+    useful = result.get("model_flops", 0.0) / max(flops_dev * chips, 1.0)
+    bound = max(terms.values())
+    frac = {k: (v / bound if bound > 0 else 0.0) for k, v in terms.items()}
+    return dict(compute_s=compute_s, memory_s=memory_s,
+                collective_s=collective_s, dominant=dominant,
+                useful_flops_ratio=useful,
+                step_lower_bound_s=bound,
+                fractions=frac)

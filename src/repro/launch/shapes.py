@@ -1,0 +1,109 @@
+"""Assigned input shapes + ShapeDtypeStruct input specs per (arch, shape).
+
+The four assigned shapes:
+
+    train_4k     seq=4096    global_batch=256   (training -> train_step)
+    prefill_32k  seq=32768   global_batch=32    (inference prefill)
+    decode_32k   seq=32768   global_batch=128   (1 token vs 32k KV cache)
+    long_500k    seq=524288  global_batch=1     (1 token, sub-quadratic)
+
+Decode shapes lower ``serve_step`` — ONE new token against a cache of
+``seq_len`` — never ``train_step``.  long_500k engages each architecture's
+sub-quadratic path: SSM/hybrid state recurrence, or the sliding-window
+ring-buffer cache for full-attention architectures (window = config's
+sliding_window, cache length = window).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    batch: int
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524288, 1),
+}
+
+
+def window_for(cfg: ArchConfig, shape: InputShape) -> Optional[int]:
+    """Sliding window is engaged only for the long-context decode shape."""
+    if shape.name == "long_500k":
+        return cfg.sliding_window
+    return None
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _seq_batch_specs(cfg: ArchConfig, b: int, s: int,
+                     with_labels: bool) -> Dict:
+    """ShapeDtypeStructs for a full-sequence batch of one modality."""
+    if cfg.modality == "vlm":
+        text = max(8, s - cfg.n_image_tokens)
+        out = dict(
+            image_embeds=sds((b, cfg.n_image_tokens, cfg.d_vision),
+                             jnp.bfloat16),
+            tokens=sds((b, text), jnp.int32),
+            positions=sds((cfg.n_image_tokens + text,), jnp.int32),
+        )
+        if with_labels:
+            out["labels"] = sds((b, cfg.n_image_tokens + text), jnp.int32)
+        return out
+    if cfg.modality == "audio":
+        out = dict(codes=sds((b, cfg.n_codebooks, s), jnp.int32),
+                   positions=sds((s,), jnp.int32))
+        if with_labels:
+            out["labels_codes"] = sds((b, cfg.n_codebooks, s), jnp.int32)
+        return out
+    out = dict(tokens=sds((b, s), jnp.int32), positions=sds((s,), jnp.int32))
+    if with_labels:
+        out["labels"] = sds((b, s), jnp.int32)
+    return out
+
+
+def _decode_batch_specs(cfg: ArchConfig, b: int) -> Dict:
+    if cfg.modality == "audio":
+        return dict(codes=sds((b, cfg.n_codebooks, 1), jnp.int32))
+    return dict(tokens=sds((b, 1), jnp.int32))
+
+
+def cache_specs(cfg: ArchConfig, batch: int, cache_len: int):
+    """Cache ShapeDtypeStructs without allocating anything."""
+    return jax.eval_shape(
+        lambda: tf.init_caches(cfg, batch, cache_len, jnp.bfloat16))
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> Dict:
+    """Step-function input ShapeDtypeStructs for one (arch, shape) pair."""
+    win = window_for(cfg, shape)
+    if shape.kind == "train":
+        return dict(batch=_seq_batch_specs(cfg, shape.batch, shape.seq_len,
+                                           with_labels=True))
+    if shape.kind == "prefill":
+        return dict(batch=_seq_batch_specs(cfg, shape.batch, shape.seq_len,
+                                           with_labels=False))
+    if shape.kind == "decode":
+        clen = shape.seq_len if win is None else min(shape.seq_len, win)
+        return dict(
+            caches=cache_specs(cfg, shape.batch, clen),
+            batch=_decode_batch_specs(cfg, shape.batch),
+            qpos=sds((shape.batch,), jnp.int32),
+        )
+    raise ValueError(shape.kind)

@@ -1,0 +1,3 @@
+from repro.models import transformer
+
+__all__ = ["transformer"]

@@ -1,0 +1,47 @@
+"""Token embeddings + output heads (text and multi-codebook audio)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32) -> Dict:
+    return dict(emb=(jax.random.normal(key, (vocab, d_model)) * 0.02
+                     ).astype(dtype))
+
+
+def embed(params: Dict, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return params["emb"].astype(dtype)[tokens]
+
+
+def init_codebook_embedding(key, n_codebooks: int, vocab: int, d_model: int,
+                            dtype=jnp.float32) -> Dict:
+    """MusicGen-style: one embedding table per EnCodec codebook, summed."""
+    return dict(emb=(jax.random.normal(key, (n_codebooks, vocab, d_model))
+                     * 0.02).astype(dtype))
+
+
+def embed_codebooks(params: Dict, codes: jnp.ndarray, dtype) -> jnp.ndarray:
+    """codes: (B, K, S) int32 -> (B, S, D) summed over codebooks."""
+    emb = params["emb"].astype(dtype)  # (K, V, D)
+    outs = [emb[k][codes[:, k]] for k in range(codes.shape[1])]
+    return sum(outs)
+
+
+def init_head(key, d_model: int, vocab: int, n_codebooks: int = 0,
+              dtype=jnp.float32) -> Dict:
+    if n_codebooks:
+        return dict(w=(jax.random.normal(key, (n_codebooks, d_model, vocab))
+                       * d_model ** -0.5).astype(dtype))
+    return dict(w=(jax.random.normal(key, (d_model, vocab))
+                   * d_model ** -0.5).astype(dtype))
+
+
+def head_logits(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, D) -> (B, S, V) or (B, S, K, V) for audio."""
+    w = params["w"].astype(x.dtype)
+    if w.ndim == 3:
+        return jnp.einsum("bsd,kdv->bskv", x, w)
+    return x @ w

@@ -1,0 +1,196 @@
+"""Mamba2 (SSD) layer — chunked state-space duality forward + O(1) decode.
+
+Training/prefill uses the chunkwise SSD algorithm (Dao & Gu 2024): within a
+chunk of Q tokens the quadratic matmul form runs on the MXU; states are
+carried across chunks with a lax.scan, so memory is O(Q^2) per chunk rather
+than O(S^2).  Decode is the exact single-step recurrence on the
+(B, nheads, headdim, dstate) state — this is what makes long_500k decode
+O(1) in sequence length for the SSM/hybrid architectures.
+
+ngroups is fixed at 1 (B/C shared across heads), matching Zamba2.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.norms import rms_norm
+
+CONV_WIDTH = 4
+
+
+def dims(d_model: int, expand: int, headdim: int, d_state: int):
+    d_inner = expand * d_model
+    nheads = d_inner // headdim
+    conv_dim = d_inner + 2 * d_state  # x, B, C all convolved
+    return d_inner, nheads, conv_dim
+
+
+def init_mamba2_params(key, d_model: int, *, expand: int = 2,
+                       headdim: int = 64, d_state: int = 64,
+                       dtype=jnp.float32) -> Dict:
+    d_inner, nheads, conv_dim = dims(d_model, expand, headdim, d_state)
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * d_inner + 2 * d_state + nheads  # z, x, B, C, dt
+    s = d_model ** -0.5
+    dt_init = jnp.exp(jax.random.uniform(ks[2], (nheads,)) *
+                      (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+    return dict(
+        in_proj=(jax.random.normal(ks[0], (d_model, in_dim)) * s
+                 ).astype(dtype),
+        conv_w=(jax.random.normal(ks[1], (CONV_WIDTH, conv_dim)) * 0.1
+                ).astype(dtype),
+        conv_b=jnp.zeros((conv_dim,), dtype),
+        A_log=jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        D=jnp.ones((nheads,), jnp.float32),
+        dt_bias=(dt_init + jnp.log(-jnp.expm1(-dt_init))).astype(jnp.float32),
+        norm_w=jnp.ones((d_inner,), dtype),
+        out_proj=(jax.random.normal(ks[3], (d_inner, d_model))
+                  * d_inner ** -0.5).astype(dtype),
+    )
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 cache: jnp.ndarray | None = None):
+    """Depthwise causal conv over (B, S, C); cache (B, CONV_WIDTH-1, C)."""
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], CONV_WIDTH - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(CONV_WIDTH))
+    new_cache = xp[:, -(CONV_WIDTH - 1):]
+    return out + b.astype(x.dtype), new_cache
+
+
+def _split_proj(zxbcdt, d_inner, d_state, nheads):
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + d_inner + 2 * d_state]
+    dt = zxbcdt[..., -nheads:]
+    return z, xbc, dt
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+                b_in: jnp.ndarray, c_in: jnp.ndarray, d_skip: jnp.ndarray,
+                *, chunk: int = 128,
+                init_state: jnp.ndarray | None = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunkwise SSD.
+
+    x: (B, S, H, P); dt: (B, S, H); b_in/c_in: (B, S, N); returns
+    (y (B, S, H, P), final_state (B, H, P, N)).  fp32 internally.
+    """
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (H,)
+    dtf = dt.astype(jnp.float32)
+    xf = (x.astype(jnp.float32) * dtf[..., None])  # dt-scaled input
+    adt = dtf * a  # (B, S', H)
+
+    def to_chunks(t, trailing):
+        return t.reshape((bsz, nc, chunk) + trailing).transpose(
+            (1, 0, 2) + tuple(range(3, 3 + len(trailing))))
+
+    xc = to_chunks(xf, (h, p))       # (nc, B, Q, H, P)
+    ac = to_chunks(adt, (h,))        # (nc, B, Q, H)
+    bc = to_chunks(b_in.astype(jnp.float32), (n,))  # (nc, B, Q, N)
+    cc = to_chunks(c_in.astype(jnp.float32), (n,))
+
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        x_q, a_q, b_q, c_q = inp  # (B,Q,H,P) (B,Q,H) (B,Q,N) (B,Q,N)
+        t_cum = jnp.cumsum(a_q, axis=1)  # inclusive (B,Q,H)
+        # intra-chunk: M[b,h,i,j] = exp(T_i - T_j) * (C_i . B_j), i >= j
+        scores = jnp.einsum("bin,bjn->bij", c_q, b_q)
+        decay = jnp.exp(t_cum[:, :, None, :] - t_cum[:, None, :, :])
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        m = jnp.where(tri[None, :, :, None], decay, 0.0) * \
+            scores[..., None]  # (B,i,j,H)
+        y_diag = jnp.einsum("bijh,bjhp->bihp", m, x_q)
+        # inter-chunk: previous state decayed to each position
+        out_decay = jnp.exp(t_cum)  # (B,Q,H)
+        y_off = jnp.einsum("bin,bhpn,bih->bihp", c_q, state, out_decay)
+        # state update
+        t_last = t_cum[:, -1:, :]  # (B,1,H)
+        in_decay = jnp.exp(t_last - t_cum)  # (B,Q,H)
+        chunk_state = jnp.einsum("bjn,bjhp,bjh->bhpn", b_q, x_q, in_decay)
+        state_new = jnp.exp(t_last[:, 0, :])[..., None, None] * state + \
+            chunk_state
+        return state_new, y_diag + y_off
+
+    final_state, ys = jax.lax.scan(step, init_state, (xc, ac, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * chunk, h, p)[:, :s]
+    y = y + d_skip.astype(jnp.float32) * x.astype(jnp.float32)[:, :s]
+    return y, final_state
+
+
+def mamba2_forward(params: Dict, x: jnp.ndarray, *, expand: int,
+                   headdim: int, d_state: int, chunk: int = 128,
+                   return_state: bool = False):
+    """Full-sequence forward. x: (B, S, D)."""
+    d_model = x.shape[-1]
+    d_inner, nheads, _ = dims(d_model, expand, headdim, d_state)
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split_proj(zxbcdt, d_inner, d_state, nheads)
+    xbc, conv_cache = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xin = xbc[..., :d_inner].reshape(*x.shape[:2], nheads, headdim)
+    b_in = xbc[..., d_inner:d_inner + d_state]
+    c_in = xbc[..., d_inner + d_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    y, state = ssd_chunked(xin, dt, params["A_log"], b_in, c_in,
+                           params["D"][None, None, :, None], chunk=chunk)
+    y = y.reshape(*x.shape[:2], d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"])
+    out = y @ params["out_proj"].astype(x.dtype)
+    if return_state:
+        return out, dict(state=state, conv=conv_cache)
+    return out
+
+
+def mamba2_decode(params: Dict, x: jnp.ndarray, cache: Dict, *, expand: int,
+                  headdim: int, d_state: int):
+    """Single-token recurrence. x: (B, 1, D); cache {state, conv}."""
+    d_model = x.shape[-1]
+    d_inner, nheads, _ = dims(d_model, expand, headdim, d_state)
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split_proj(zxbcdt, d_inner, d_state, nheads)
+    xbc, conv_cache = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                   cache["conv"])
+    xbc = jax.nn.silu(xbc)[:, 0]
+    xin = xbc[..., :d_inner].reshape(-1, nheads, headdim).astype(jnp.float32)
+    b_in = xbc[..., d_inner:d_inner + d_state].astype(jnp.float32)
+    c_in = xbc[..., d_inner + d_state:].astype(jnp.float32)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    da = jnp.exp(dtv * a)  # (B, H)
+    state = cache["state"] * da[..., None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xin, b_in, dtv)
+    y = jnp.einsum("bhpn,bn->bhp", state, c_in) + \
+        params["D"][None, :, None] * xin
+    y = y.reshape(-1, 1, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"])
+    out = y @ params["out_proj"].astype(x.dtype)
+    return out, dict(state=state, conv=conv_cache)
+
+
+def init_mamba2_cache(batch: int, d_model: int, *, expand: int, headdim: int,
+                      d_state: int, dtype=jnp.float32) -> Dict:
+    d_inner, nheads, conv_dim = dims(d_model, expand, headdim, d_state)
+    return dict(
+        state=jnp.zeros((batch, nheads, headdim, d_state), jnp.float32),
+        conv=jnp.zeros((batch, CONV_WIDTH - 1, conv_dim), dtype),
+    )

@@ -1,0 +1,156 @@
+"""Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3).
+
+Train/prefill: materialize K/V from the compressed latent and run chunked
+flash attention.  Decode: the *absorbed-weight* formulation — scores and
+outputs are computed directly in the kv_lora latent space, so the cache per
+token is only (kv_lora_rank + qk_rope_dim) scalars instead of
+2 * H * head_dim.  This is the production MLA decode path and is what makes
+the decode_32k roofline memory term small for the MLA architectures.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.attention import flash_attention, _NEG_INF
+from repro.models.layers.norms import rms_norm
+from repro.models.layers.rope import apply_rope, rope_angles
+from repro.sharding import ctx as shard_ctx
+
+
+def init_mla_params(key, d_model: int, n_heads: int, *, q_lora_rank: int,
+                    kv_lora_rank: int, qk_nope_dim: int, qk_rope_dim: int,
+                    v_head_dim: int, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 6)
+    qk_dim = qk_nope_dim + qk_rope_dim
+    s = d_model ** -0.5
+    p = {}
+    if q_lora_rank > 0:
+        p["wq_a"] = (jax.random.normal(ks[0], (d_model, q_lora_rank)) * s
+                     ).astype(dtype)
+        p["q_norm"] = jnp.ones((q_lora_rank,), dtype)
+        p["wq_b"] = (jax.random.normal(ks[1], (q_lora_rank, n_heads * qk_dim))
+                     * q_lora_rank ** -0.5).astype(dtype)
+    else:
+        p["wq"] = (jax.random.normal(ks[1], (d_model, n_heads * qk_dim)) * s
+                   ).astype(dtype)
+    p["wkv_a"] = (jax.random.normal(
+        ks[2], (d_model, kv_lora_rank + qk_rope_dim)) * s).astype(dtype)
+    p["kv_norm"] = jnp.ones((kv_lora_rank,), dtype)
+    p["wkv_b"] = (jax.random.normal(
+        ks[3], (kv_lora_rank, n_heads * (qk_nope_dim + v_head_dim)))
+        * kv_lora_rank ** -0.5).astype(dtype)
+    p["wo"] = (jax.random.normal(ks[4], (n_heads * v_head_dim, d_model))
+               * (n_heads * v_head_dim) ** -0.5).astype(dtype)
+    return p
+
+
+def _project_q(params: Dict, x: jnp.ndarray, n_heads: int, qk_nope: int,
+               qk_rope: int):
+    b, s, _ = x.shape
+    qk_dim = qk_nope + qk_rope
+    if "wq_a" in params:
+        ql = x @ params["wq_a"].astype(x.dtype)
+        ql = rms_norm(ql, params["q_norm"])
+        q = ql @ params["wq_b"].astype(x.dtype)
+    else:
+        q = x @ params["wq"].astype(x.dtype)
+    q = q.reshape(b, s, n_heads, qk_dim)
+    return q[..., :qk_nope], q[..., qk_nope:]
+
+
+def mla_forward(params: Dict, x: jnp.ndarray, *, n_heads: int,
+                qk_nope_dim: int, qk_rope_dim: int, v_head_dim: int,
+                kv_lora_rank: int, rope_theta: float,
+                positions: jnp.ndarray, window: Optional[int] = None,
+                return_kv: bool = False):
+    """Train / prefill with materialized K/V."""
+    b, s, _ = x.shape
+    q_nope, q_rope = _project_q(params, x, n_heads, qk_nope_dim, qk_rope_dim)
+
+    kv_a = x @ params["wkv_a"].astype(x.dtype)
+    c_kv = rms_norm(kv_a[..., :kv_lora_rank], params["kv_norm"])
+    k_rope = kv_a[..., kv_lora_rank:].reshape(b, s, 1, qk_rope_dim)
+
+    cos, sin = rope_angles(positions, qk_rope_dim, rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+
+    kv = (c_kv @ params["wkv_b"].astype(x.dtype)).reshape(
+        b, s, n_heads, qk_nope_dim + v_head_dim)
+    k_nope, v = kv[..., :qk_nope_dim], kv[..., qk_nope_dim:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, n_heads, qk_rope_dim))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = flash_attention(q, k, v, positions=positions, causal=True,
+                          window=window)
+    y = out.reshape(b, s, n_heads * v_head_dim) @ params["wo"].astype(x.dtype)
+    if return_kv:
+        return y, (c_kv, k_rope[:, :, 0, :])  # latent cache
+    return y
+
+
+def mla_decode(params: Dict, x: jnp.ndarray, cache: Dict, *, n_heads: int,
+               qk_nope_dim: int, qk_rope_dim: int, v_head_dim: int,
+               kv_lora_rank: int, rope_theta: float, qpos: jnp.ndarray,
+               window: Optional[int] = None):
+    """Absorbed-weight one-token decode against the latent cache.
+
+    cache = {ckv: (B, L, kv_lora), krope: (B, L, qk_rope), pos: (B, L)}.
+    """
+    b = x.shape[0]
+    q_nope, q_rope = _project_q(params, x, n_heads, qk_nope_dim, qk_rope_dim)
+    cos, sin = rope_angles(qpos[:, None], qk_rope_dim, rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)[:, 0]  # (B, H, dr)
+
+    kv_a = (x @ params["wkv_a"].astype(x.dtype))[:, 0]
+    c_kv_new = rms_norm(kv_a[..., :kv_lora_rank], params["kv_norm"])
+    k_rope_new = apply_rope(
+        kv_a[..., kv_lora_rank:].reshape(b, 1, 1, qk_rope_dim), cos, sin
+    )[:, 0, 0]
+
+    slot = jnp.mod(qpos, cache["ckv"].shape[1])
+    bidx = jnp.arange(b)
+    c_kv_new = shard_ctx.constrain_latent(
+        c_kv_new.astype(cache["ckv"].dtype))  # SSPerf B1
+    ckv = cache["ckv"].at[bidx, slot].set(c_kv_new)
+    krope = cache["krope"].at[bidx, slot].set(
+        k_rope_new.astype(cache["krope"].dtype))
+    kpos = cache["pos"].at[bidx, slot].set(qpos)
+
+    wkv_b = params["wkv_b"].astype(x.dtype).reshape(
+        kv_lora_rank, n_heads, qk_nope_dim + v_head_dim)
+    w_uk = wkv_b[..., :qk_nope_dim]  # (kv_lora, H, dn)
+    w_uv = wkv_b[..., qk_nope_dim:]  # (kv_lora, H, dv)
+
+    # absorb: q_lat = q_nope @ W_uk  -> score directly against latent cache
+    q_lat = jnp.einsum("bhd,chd->bhc", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = (qk_nope_dim + qk_rope_dim) ** -0.5
+    s_lat = jnp.einsum("bhc,blc->bhl", q_lat,
+                       ckv.astype(jnp.float32)) * scale
+    s_rope = jnp.einsum("bhd,bld->bhl", q_rope.astype(jnp.float32),
+                        krope.astype(jnp.float32)) * scale
+    s_all = s_lat + s_rope
+    valid = (kpos >= 0) & (kpos <= qpos[:, None])
+    if window is not None:
+        valid &= qpos[:, None] - kpos < window
+    s_all = jnp.where(valid[:, None, :], s_all, _NEG_INF)
+    p = jax.nn.softmax(s_all, axis=-1)
+    out_lat = jnp.einsum("bhl,blc->bhc", p, ckv.astype(jnp.float32))
+    out = jnp.einsum("bhc,chd->bhd", out_lat, w_uv.astype(jnp.float32))
+    y = out.reshape(b, 1, n_heads * v_head_dim).astype(x.dtype) @ \
+        params["wo"].astype(x.dtype)
+    return y, dict(ckv=ckv, krope=krope, pos=kpos)
+
+
+def init_mla_cache(batch: int, length: int, kv_lora_rank: int,
+                   qk_rope_dim: int, dtype=jnp.bfloat16) -> Dict:
+    return dict(
+        ckv=jnp.zeros((batch, length, kv_lora_rank), dtype),
+        krope=jnp.zeros((batch, length, qk_rope_dim), dtype),
+        pos=jnp.full((batch, length), -1, jnp.int32),
+    )

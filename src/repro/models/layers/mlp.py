@@ -1,0 +1,46 @@
+"""Feed-forward layers: SwiGLU (llama family) and GELU MLP (connector)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def init_swiglu_params(key, d_model: int, d_ff: int,
+                       dtype=jnp.float32) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    return dict(
+        w_gate=(jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        w_up=(jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+        w_down=(jax.random.normal(k3, (d_ff, d_model)) * s_out).astype(dtype),
+    )
+
+
+def swiglu_forward(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    gate = jax.nn.silu(x @ params["w_gate"].astype(dt))
+    up = x @ params["w_up"].astype(dt)
+    return (gate * up) @ params["w_down"].astype(dt)
+
+
+def init_mlp_params(key, d_in: int, d_hidden: int, d_out: int,
+                    dtype=jnp.float32) -> Dict:
+    """Two-layer GELU MLP — the paper's vision->language connector."""
+    k1, k2 = jax.random.split(key)
+    return dict(
+        w1=(jax.random.normal(k1, (d_in, d_hidden)) * d_in ** -0.5
+            ).astype(dtype),
+        b1=jnp.zeros((d_hidden,), dtype),
+        w2=(jax.random.normal(k2, (d_hidden, d_out)) * d_hidden ** -0.5
+            ).astype(dtype),
+        b2=jnp.zeros((d_out,), dtype),
+    )
+
+
+def mlp_forward(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    h = jax.nn.gelu(x @ params["w1"].astype(dt) + params["b1"].astype(dt))
+    return h @ params["w2"].astype(dt) + params["b2"].astype(dt)

@@ -1,0 +1,28 @@
+"""Normalization layers."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray,
+             eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf / jnp.sqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dtype)
+
+
+def group_norm(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray,
+               n_groups: int, eps: float = 1e-5) -> jnp.ndarray:
+    """GroupNorm over the last axis split into ``n_groups`` (RWKV head norm)."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    shape = xf.shape
+    xg = xf.reshape(*shape[:-1], n_groups, shape[-1] // n_groups)
+    mean = jnp.mean(xg, axis=-1, keepdims=True)
+    var = jnp.var(xg, axis=-1, keepdims=True)
+    xg = (xg - mean) / jnp.sqrt(var + eps)
+    out = xg.reshape(shape) * weight.astype(jnp.float32) + \
+        bias.astype(jnp.float32)
+    return out.astype(dtype)

@@ -1,0 +1,37 @@
+"""Rotary position embeddings."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_angles(positions: jnp.ndarray, dim: int,
+                theta: float = 10000.0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for the given absolute positions.
+
+    positions: int array (...,) -> returns cos/sin of shape (..., dim // 2).
+    """
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray,
+               sin: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs (x[..., ::2], x[..., 1::2]).
+
+    x: (B, S, H, D); cos/sin: (B, S, D//2) or (S, D//2) — broadcast over H.
+    """
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    x1 = xf[..., 0::2]
+    x2 = xf[..., 1::2]
+    if cos.ndim == x.ndim - 2:  # (S, D/2) -> (S, 1, D/2)
+        cos = cos[:, None, :]
+        sin = sin[:, None, :]
+    elif cos.ndim == x.ndim - 1:  # (B, S, D/2) -> (B, S, 1, D/2)
+        cos = cos[..., None, :]
+        sin = sin[..., None, :]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(dtype)

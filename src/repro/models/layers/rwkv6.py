@@ -1,0 +1,199 @@
+"""RWKV6 ("Finch") time-mixing layer — data-dependent per-channel decay.
+
+Attention-free linear-attention recurrence with matrix-valued state
+S in R^{K x V} per head:
+
+    y_t = r_t . (S_t + diag(u) k_t v_t^T)
+    S_{t+1} = diag(w_t) S_t + k_t v_t^T,   w_t = exp(-exp(ww_t))
+
+Training/prefill uses a chunkwise form (chunk Q=16): within a chunk the
+decay products are factored into r~ = r * exp(T_{t-1}) and
+k~ = k * exp(-T_t) (T = cumulative log-decay), turning the strictly-causal
+part into two matmuls; states are carried across chunks by lax.scan.  The
+per-step log-decay is clamped to [-DECAY_CLAMP, 0] so exp(-T) stays inside
+fp32 for Q=16 (documented deviation; real RWKV6 decays rarely hit the
+clamp).  Decode is the exact O(1) recurrence — this is the sub-quadratic
+path for long_500k.
+
+Token-shift uses the RWKV6 DDLerp: a low-rank, data-dependent interpolation
+between x_t and x_{t-1} for each of (w, k, v, r, g).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.norms import group_norm
+
+DECAY_CLAMP = 5.0
+MAA_RANK = 32
+DECAY_RANK = 64
+N_MIX = 5  # w, k, v, r, g
+
+
+def init_rwkv6_params(key, d_model: int, head_dim: int = 64,
+                      dtype=jnp.float32) -> Dict:
+    h = d_model // head_dim
+    ks = jax.random.split(key, 10)
+    s = d_model ** -0.5
+    lin = lambda k, i, o, sc: (jax.random.normal(k, (i, o)) * sc).astype(dtype)
+    return dict(
+        mu_x=jnp.full((d_model,), 0.5, dtype),
+        mu_mix=jnp.full((N_MIX, d_model), 0.5, dtype),
+        maa_w1=lin(ks[0], d_model, N_MIX * MAA_RANK, 0.01),
+        maa_w2=(jax.random.normal(ks[1], (N_MIX, MAA_RANK, d_model)) * 0.01
+                ).astype(dtype),
+        decay_base=jnp.full((d_model,), -4.0, jnp.float32),
+        decay_w1=lin(ks[2], d_model, DECAY_RANK, 0.01),
+        decay_w2=lin(ks[3], DECAY_RANK, d_model, 0.01),
+        u=(jax.random.normal(ks[4], (h, head_dim)) * 0.1).astype(jnp.float32),
+        wr=lin(ks[5], d_model, d_model, s),
+        wk=lin(ks[6], d_model, d_model, s),
+        wv=lin(ks[7], d_model, d_model, s),
+        wg=lin(ks[8], d_model, d_model, s),
+        wo=lin(ks[9], d_model, d_model, s),
+        ln_w=jnp.ones((d_model,), dtype),
+        ln_b=jnp.zeros((d_model,), dtype),
+    )
+
+
+def _ddlerp(params: Dict, x: jnp.ndarray, x_prev: jnp.ndarray):
+    """Data-dependent token shift; returns (xw, xk, xv, xr, xg)."""
+    dt = x.dtype
+    xx = x_prev - x
+    xxx = x + xx * params["mu_x"].astype(dt)
+    delta = jnp.tanh(xxx @ params["maa_w1"].astype(dt))
+    delta = delta.reshape(*x.shape[:-1], N_MIX, MAA_RANK)
+    delta = jnp.einsum("...mr,mrd->m...d", delta,
+                       params["maa_w2"].astype(dt))
+    mixed = [x + xx * (params["mu_mix"][i].astype(dt) + delta[i])
+             for i in range(N_MIX)]
+    return mixed  # w, k, v, r, g order
+
+
+def _projections(params: Dict, x: jnp.ndarray, x_prev: jnp.ndarray,
+                 head_dim: int):
+    d = x.shape[-1]
+    h = d // head_dim
+    xw, xk, xv, xr, xg = _ddlerp(params, x, x_prev)
+    dt = x.dtype
+    r = (xr @ params["wr"].astype(dt)).reshape(*x.shape[:-1], h, head_dim)
+    k = (xk @ params["wk"].astype(dt)).reshape(*x.shape[:-1], h, head_dim)
+    v = (xv @ params["wv"].astype(dt)).reshape(*x.shape[:-1], h, head_dim)
+    g = jax.nn.silu(xg @ params["wg"].astype(dt))
+    ww = params["decay_base"] + (
+        jnp.tanh(xw @ params["decay_w1"].astype(dt)) @
+        params["decay_w2"].astype(dt)).astype(jnp.float32)
+    log_w = -jnp.exp(ww)  # log of decay, <= 0
+    log_w = jnp.clip(log_w, -DECAY_CLAMP, 0.0)
+    log_w = log_w.reshape(*x.shape[:-1], h, head_dim)
+    return r, k, v, g, log_w
+
+
+def wkv_chunked(r, k, v, log_w, u, *, chunk: int = 16,
+                init_state=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunkwise WKV.  r/k/v/log_w: (B, S, H, K); u: (H, K).
+
+    Returns (y (B, S, H, K), final state (B, H, K, K)).
+    """
+    b, s, h, dk = r.shape
+    pad = (-s) % chunk
+    if pad:
+        zf = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, log_w = zf(r), zf(k), zf(v), zf(log_w)
+    nc = r.shape[1] // chunk
+
+    def to_chunks(t):
+        return t.reshape(b, nc, chunk, h, dk).transpose(1, 0, 2, 3, 4)
+
+    rc, kc, vc, wc = map(to_chunks, (
+        r.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), log_w.astype(jnp.float32)))
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, dk, dk), jnp.float32)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strict lower
+
+    def step(state, inp):
+        r_q, k_q, v_q, w_q = inp  # (B, Q, H, K)
+        t_cum = jnp.cumsum(w_q, axis=1)  # inclusive (B,Q,H,K)
+        t_prev = t_cum - w_q  # exclusive cumsum
+        r_dec = r_q * jnp.exp(t_prev)
+        k_dec = k_q * jnp.exp(-t_cum)
+        scores = jnp.einsum("bqhk,bjhk->bhqj", r_dec, k_dec)
+        scores = jnp.where(tri[None, None], scores, 0.0)
+        bonus = jnp.einsum("bqhk,hk,bqhk->bhq", r_q, u, k_q)
+        y_intra = jnp.einsum("bhqj,bjhk->bqhk", scores, v_q) + \
+            bonus.transpose(0, 2, 1)[..., None] * v_q
+        y_inter = jnp.einsum("bqhk,bhkv->bqhv", r_dec, state)
+        t_last = t_cum[:, -1]  # (B,H,K)
+        k_rem = k_q * jnp.exp(t_last[:, None] - t_cum)
+        state_new = jnp.exp(t_last)[..., None] * state + jnp.einsum(
+            "bqhk,bqhv->bhkv", k_rem, v_q)
+        return state_new, y_intra + y_inter
+
+    final_state, ys = jax.lax.scan(step, init_state, (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, h, dk)[:, :s]
+    return y, final_state
+
+
+def wkv_recurrent(r, k, v, log_w, u, init_state=None):
+    """Exact per-token recurrence — test oracle for wkv_chunked."""
+    b, s, h, dk = r.shape
+    if init_state is None:
+        init_state = jnp.zeros((b, h, dk, dk), jnp.float32)
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = [t.astype(jnp.float32) for t in inp]
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, state + u[..., None] * kv)
+        state = jnp.exp(w_t)[..., None] * state + kv
+        return state, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, log_w))
+    state, ys = jax.lax.scan(step, init_state, xs)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def rwkv6_forward(params: Dict, x: jnp.ndarray, *, head_dim: int = 64,
+                  chunk: int = 16, return_state: bool = False):
+    """Full-sequence forward. x: (B, S, D)."""
+    b, s, d = x.shape
+    h = d // head_dim
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, log_w = _projections(params, x, x_prev, head_dim)
+    y, state = wkv_chunked(r, k, v, log_w, params["u"], chunk=chunk)
+    y = group_norm(y.reshape(b, s, d).astype(x.dtype), params["ln_w"],
+                   params["ln_b"], n_groups=h)
+    out = (y * g) @ params["wo"].astype(x.dtype)
+    if return_state:
+        return out, dict(state=state, x_last=x[:, -1:])
+    return out
+
+
+def rwkv6_decode(params: Dict, x: jnp.ndarray, cache: Dict, *,
+                 head_dim: int = 64):
+    """One-token step. x: (B, 1, D); cache {state, x_last}."""
+    b, _, d = x.shape
+    h = d // head_dim
+    r, k, v, g, log_w = _projections(params, x, cache["x_last"], head_dim)
+    r1, k1, v1, w1 = (t[:, 0].astype(jnp.float32) for t in (r, k, v, log_w))
+    kv = jnp.einsum("bhk,bhv->bhkv", k1, v1)
+    y = jnp.einsum("bhk,bhkv->bhv", r1,
+                   cache["state"] + params["u"][..., None] * kv)
+    state = jnp.exp(w1)[..., None] * cache["state"] + kv
+    y = group_norm(y.reshape(b, 1, d).astype(x.dtype), params["ln_w"],
+                   params["ln_b"], n_groups=h)
+    out = (y * g) @ params["wo"].astype(x.dtype)
+    return out, dict(state=state, x_last=x)
+
+
+def init_rwkv6_cache(batch: int, d_model: int, head_dim: int = 64,
+                     dtype=jnp.float32) -> Dict:
+    h = d_model // head_dim
+    return dict(
+        state=jnp.zeros((batch, h, head_dim, head_dim), jnp.float32),
+        x_last=jnp.zeros((batch, 1, d_model), dtype),
+    )

@@ -1,0 +1,84 @@
+"""AdamW from scratch (no optax dependency).
+
+Production niceties: global-norm gradient clipping, decoupled weight decay
+(skipped for norms/biases/1-D params), and configurable moment dtype —
+bf16 moments shard the optimizer state of the 236B/480B MoE configs inside
+per-device HBM (see EXPERIMENTS.md SSPerf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 2e-5
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"  # float32 | bfloat16
+
+
+def init_opt_state(params, cfg: AdamWConfig) -> Dict[str, Any]:
+    dt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return dict(
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def _decay_mask(params):
+    """Weight decay only on >=2-D weights (not norms, biases, scalars)."""
+    return jax.tree_util.tree_map(lambda p: p.ndim >= 2, params)
+
+
+def adamw_update(params, grads, state: Dict, cfg: AdamWConfig,
+                 lr_scale: jnp.ndarray | float = 1.0
+                 ) -> Tuple[Any, Dict, Dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state["step"] + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v, decay):
+        gf = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+        m_hat = m_new / b1c
+        v_hat = v_new / b2c
+        delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+        if decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return (p_new.astype(p.dtype), m_new.astype(m.dtype),
+                v_new.astype(v.dtype))
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_mask = treedef.flatten_up_to(_decay_mask(params))
+    out = [upd(p, g, m, v, dk) for p, g, m, v, dk in
+           zip(flat_p, flat_g, flat_m, flat_v, flat_mask)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = dict(grad_norm=gnorm, lr=jnp.asarray(lr, jnp.float32))
+    return new_p, dict(m=new_m, v=new_v, step=step), metrics

@@ -1,0 +1,4 @@
+from repro.serve.decode import (cache_length, generate, make_serve_step,
+                                prefill)
+
+__all__ = ["cache_length", "generate", "make_serve_step", "prefill"]

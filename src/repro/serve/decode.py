@@ -1,0 +1,91 @@
+"""Serving: one-token decode step + batched autoregressive generation.
+
+``make_serve_step(cfg)`` returns the jit-able function lowered by the
+decode_32k / long_500k dry-run shapes: ONE new token against a KV/state
+cache of the configured length.  ``generate`` drives it autoregressively
+(greedy or temperature sampling) for the examples.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+
+
+def cache_length(cfg: ArchConfig, seq_len: int,
+                 window: Optional[int]) -> int:
+    """Ring-buffer size: full history, or the window for long-context."""
+    if window is not None:
+        return min(seq_len, window)
+    return seq_len
+
+
+def make_serve_step(cfg: ArchConfig, *,
+                    window: Optional[int] = None) -> Callable:
+    def serve_step(params, caches, batch: Dict, qpos: jnp.ndarray):
+        logits, new_caches = tf.decode_step(params, cfg, caches, batch, qpos,
+                                            window=window)
+        return logits, new_caches
+
+    return serve_step
+
+
+def prefill(params, cfg: ArchConfig, batch: Dict, cache_len: int, *,
+            window: Optional[int] = None,
+            rng: Optional[jax.Array] = None):
+    """Run the full-sequence pass and return (last_logits, caches)."""
+    logits, aux, caches = tf.forward(params, cfg, batch, rng=rng,
+                                     window=window, collect_cache=cache_len)
+    return logits, caches
+
+
+def generate(params, cfg: ArchConfig, batch: Dict, *, n_new: int,
+             cache_len: int, window: Optional[int] = None,
+             temperature: float = 0.0, rng: Optional[jax.Array] = None
+             ) -> jnp.ndarray:
+    """Prefill + greedy/sampled generation of ``n_new`` tokens."""
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+    logits, caches = prefill(params, cfg, batch, cache_len, window=window,
+                             rng=rng)
+    if cfg.modality == "audio":
+        prompt_len = batch["codes"].shape[-1]
+        bsz = batch["codes"].shape[0]
+    elif cfg.modality == "vlm":
+        prompt_len = batch["tokens"].shape[1] + cfg.n_image_tokens
+        bsz = batch["tokens"].shape[0]
+    else:
+        prompt_len = batch["tokens"].shape[1]
+        bsz = batch["tokens"].shape[0]
+
+    serve_step = jax.jit(make_serve_step(cfg, window=window))
+
+    def pick(logits, key):
+        last = logits[:, -1]
+        if cfg.modality == "audio":  # (B, K, V)
+            last = logits[:, -1]
+        if temperature <= 0.0:
+            return jnp.argmax(last, axis=-1)
+        return jax.random.categorical(key, last / temperature, axis=-1)
+
+    out = []
+    tok = pick(logits, rng)
+    for i in range(n_new):
+        out.append(tok)
+        qpos = jnp.full((bsz,), prompt_len + i, jnp.int32)
+        if cfg.modality == "audio":
+            step_batch = dict(codes=tok[..., None].astype(jnp.int32)
+                              if tok.ndim == 2 else
+                              jnp.broadcast_to(tok[:, None, None],
+                                               (bsz, cfg.n_codebooks, 1)
+                                               ).astype(jnp.int32))
+        else:
+            step_batch = dict(tokens=tok[:, None].astype(jnp.int32))
+        rng, sub = jax.random.split(rng)
+        logits, caches = serve_step(params, caches, step_batch, qpos)
+        tok = pick(logits, sub)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,6 @@
+from repro.sharding.specs import (batch_pspecs, cache_pspecs, leaf_pspec,
+                                  mesh_axes, opt_pspecs, param_pspecs,
+                                  state_pspecs)
+
+__all__ = ["batch_pspecs", "cache_pspecs", "leaf_pspec", "mesh_axes",
+           "opt_pspecs", "param_pspecs", "state_pspecs"]

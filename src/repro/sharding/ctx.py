@@ -1,0 +1,157 @@
+"""Activation-sharding context.
+
+GSPMD propagates weight shardings to activations, but at reshape-heavy
+spots (microbatch split, logits/CE, MoE dispatch buffers) it can drop the
+batch sharding and replicate multi-GiB tensors (measured on train_4k:
+fp32 logits at 128k vocab replicated; deepseek-v2 MoE dispatch buffers at
+251 GiB/device).  Production JAX stacks pin logical activation axes
+explicitly; this module is that, kept minimal.
+
+The launcher (dryrun/train) installs rules; model code calls
+``constrain(x, kind)`` which is a no-op when no rules are installed (unit
+tests, single-device runs).  Every sharded dim is divisibility-checked
+against the mesh axis sizes and silently dropped when it does not divide
+(e.g. 16 MoE groups on a 32-way multi-pod data axis).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_RULES: Dict[str, P] = {}
+_AXES: Dict[str, int] = {}
+_PARAM_SPECS = None  # pytree of PartitionSpec matching the model params
+
+
+def install(dp: Tuple[str, ...], axes: Optional[Dict[str, int]] = None,
+            model: str = "model") -> None:
+    """Install standard rules for a (data..., model) mesh."""
+    global _RULES, _AXES
+    _AXES = dict(axes or {})
+    _RULES = dict(
+        hidden=P(dp, None, None),            # (B, S, D) / (G, TG, D)
+        logits=P(dp, None, model),           # (B, S, V)
+        batch_leading=P(dp),                 # generic leading batch dim
+        moe_experts=P(dp, model, None, None),  # (G, E, C, D)
+        decode_q=P(dp, None, None, model),     # (B, KH, G, hd): contract
+        # the head_dim against the hd-sharded KV cache (partial sums are
+        # ~MBs; gathering the cache is ~GBs — SSPerf B2)
+    )
+
+
+def set_param_specs(specs) -> None:
+    """Register the parameter PartitionSpecs so gradient accumulators can
+    be pinned to the same (FSDP) sharding — turning the per-microbatch
+    gradient all-reduce into a reduce-scatter (EXPERIMENTS.md SSPerf A3).
+    """
+    global _PARAM_SPECS
+    _PARAM_SPECS = specs
+
+
+def constrain_like_params(tree):
+    if _PARAM_SPECS is None or not _RULES:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda a, spec: jax.lax.with_sharding_constraint(
+            a, _fit_spec(spec, a.shape)) if hasattr(a, "ndim") and
+        len(tuple(spec)) == a.ndim else a,
+        tree, _PARAM_SPECS,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def clear() -> None:
+    global _RULES, _AXES, _PARAM_SPECS
+    _RULES = {}
+    _AXES = {}
+    _PARAM_SPECS = None
+
+
+def active() -> bool:
+    return bool(_RULES)
+
+
+def dp_size() -> int:
+    n = 1
+    for a in ("pod", "data"):
+        n *= _AXES.get(a, 1)
+    return n
+
+
+def _axis_size(entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= _AXES.get(a, 1)
+        return n
+    return _AXES.get(entry, 1)
+
+
+def _fit_spec(spec: P, shape) -> P:
+    """Drop spec entries whose axis size does not divide the dim."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec)):
+        size = _axis_size(entry)
+        out.append(entry if size > 1 and dim % size == 0 else None)
+    return P(*out)
+
+
+def constrain(x, kind: str):
+    spec = _RULES.get(kind)
+    if spec is None or not hasattr(x, "ndim"):
+        return x
+    if kind == "batch_leading":
+        spec = P(*(tuple(spec) + (None,) * (x.ndim - 1)))
+    if len(spec) != x.ndim:
+        return x
+    spec = _fit_spec(spec, x.shape)
+    if all(e is None for e in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_kv(x, dp=("pod", "data")):
+    """Pin a new KV token (B, KH, hd) to the ring-buffer cache layout:
+    heads over `model` when they divide, else head_dim over `model`.
+
+    Without this, the decode-step cache scatter reshards through a full
+    rematerialization of the cache (GSPMD "involuntary full remat" —
+    measured 60 GB/device per decoded token on llama decode_32k;
+    EXPERIMENTS.md SSPerf B1).
+    """
+    if not _RULES or x.ndim != 3:
+        return x
+    m = _AXES.get("model", 1)
+    dp_t = tuple(a for a in dp if a in _AXES)
+    b, kh, hd = x.shape
+    lead = dp_t if dp_t and b % max(_axis_size(dp_t), 1) == 0 else None
+    if m > 1 and kh % m == 0:
+        spec = P(lead, "model", None)
+    elif m > 1 and hd % m == 0:
+        spec = P(lead, None, "model")
+    else:
+        spec = P(lead, None, None)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_latent(x, dp=("pod", "data")):
+    """Pin a new MLA latent token (B, C) to the latent-cache layout."""
+    if not _RULES or x.ndim != 2:
+        return x
+    m = _AXES.get("model", 1)
+    dp_t = tuple(a for a in dp if a in _AXES)
+    b, c = x.shape
+    lead = dp_t if dp_t and b % max(_axis_size(dp_t), 1) == 0 else None
+    spec = P(lead, "model" if m > 1 and c % m == 0 else None)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_batch_tree(tree):
+    """Pin the leading batch dim of every array leaf."""
+    if not _RULES:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda a: constrain(a, "batch_leading"), tree)

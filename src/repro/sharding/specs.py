@@ -1,0 +1,202 @@
+"""PartitionSpec rules for every parameter / batch / cache leaf.
+
+Axes: ``data`` shards batch (and optionally weights, FSDP-style),
+``model`` shards heads / FFN hidden / experts / vocab, ``pod`` is folded
+into data-parallel for the 40-combo dry-runs (and is the split-stage axis
+in launch/split_pipeline.py).
+
+Rules are name-based on the leaf path; every candidate sharded dim is
+checked for divisibility by the mesh axis size and silently falls back to
+replication when it does not divide (e.g. 8 KV heads on a 16-way model
+axis).
+
+``fsdp=True`` additionally shards the "other" dim of >=2-D weights over
+``data`` — this is the ZeRO-3-style mode that fits the 480B Arctic
+optimizer state into per-device HBM (EXPERIMENTS.md SSPerf).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+Axes = Dict[str, int]  # axis name -> size
+
+
+def _fits(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0
+
+
+def _axis(axes: Axes, name: str, dim: int) -> Optional[str]:
+    return name if name in axes and _fits(dim, axes[name]) else None
+
+
+def _col(shape, axes, fsdp):
+    """(in, out) weight sharded on output dim; fsdp also shards input."""
+    spec = [None] * len(shape)
+    spec[-1] = _axis(axes, "model", shape[-1])
+    if fsdp:
+        spec[-2] = _axis(axes, "data", shape[-2])
+    return P(*spec)
+
+
+def _row(shape, axes, fsdp):
+    spec = [None] * len(shape)
+    spec[-2] = _axis(axes, "model", shape[-2])
+    if fsdp:
+        spec[-1] = _axis(axes, "data", shape[-1])
+    return P(*spec)
+
+
+_COL_NAMES = {"wq", "wk", "wv", "wq_a", "wq_b", "wkv_a", "wkv_b", "w_gate",
+              "w_up", "w_in", "in_proj", "conv_w", "wr", "wg", "enc_w",
+              "w1"}
+_ROW_NAMES = {"wo", "w_down", "out_proj", "dec_w", "w2"}
+
+
+def leaf_pspec(path_names: Sequence[str], shape: Tuple[int, ...],
+               axes: Axes, *, fsdp: bool = False,
+               stacked: bool = False) -> P:
+    """PartitionSpec for one parameter leaf."""
+    if stacked:  # leading layer axis from segment stacking
+        inner = leaf_pspec(path_names, shape[1:], axes, fsdp=fsdp)
+        return P(None, *inner)
+    name = path_names[-1]
+    parent = path_names[-2] if len(path_names) > 1 else ""
+
+    if len(shape) <= 1:
+        return P(*([None] * len(shape)))  # norms, biases, scalars
+
+    if name == "emb":
+        if len(shape) == 3:  # (K, V, D) audio codebooks
+            return P(None, _axis(axes, "model", shape[1]),
+                     _axis(axes, "data", shape[2]) if fsdp else None)
+        return P(_axis(axes, "model", shape[0]),
+                 _axis(axes, "data", shape[1]) if fsdp else None)
+    if parent == "head" and name == "w":
+        spec = [None] * len(shape)
+        spec[-1] = _axis(axes, "model", shape[-1])
+        if fsdp:
+            spec[-2] = _axis(axes, "data", shape[-2])
+        return P(*spec)
+    if parent == "ffn" and len(shape) == 3:  # MoE experts (E, D, F)/(E, F, D)
+        # E over model (expert parallel) + d_model over data (FSDP).
+        # (Sharding the FFN-hidden dim to contraction-align the expert
+        # einsums was tried and REFUTED: GSPMD all-gathered 4.9 TB/dev
+        # instead of emitting all-to-alls — EXPERIMENTS.md SSPerf A4.)
+        return P(_axis(axes, "model", shape[0]),
+                 _axis(axes, "data", shape[1]) if fsdp else None, None)
+    if name == "router":
+        return P(None, None)
+    if name in _COL_NAMES:
+        return _col(shape, axes, fsdp)
+    if name in _ROW_NAMES:
+        return _row(shape, axes, fsdp)
+    if name in ("maa_w1", "maa_w2", "decay_w1", "decay_w2", "u"):
+        return P(*([None] * len(shape)))
+    # default: replicate
+    return P(*([None] * len(shape)))
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def param_pspecs(params, axes: Axes, *, fsdp: bool = False):
+    """PartitionSpecs for the whole param tree."""
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        stacked = any(n.startswith("seg") for n in names)
+        return leaf_pspec(names, tuple(leaf.shape), axes, fsdp=fsdp,
+                          stacked=stacked)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def opt_pspecs(opt_state, params_specs):
+    """Adam moments share the parameter specs; step is replicated."""
+    return dict(m=params_specs, v=params_specs, step=P())
+
+
+def _dp_size(axes: Axes, dp: Tuple[str, ...]) -> int:
+    n = 1
+    for a in dp:
+        n *= axes.get(a, 1)
+    return n
+
+
+def _dp_or_none(axes: Axes, dp: Tuple[str, ...], dim: int):
+    """Batch axis group if the dim divides; else replicate (e.g. B=1)."""
+    return dp if dim % max(_dp_size(axes, dp), 1) == 0 else None
+
+
+def batch_pspecs(batch, dp: Tuple[str, ...], axes: Optional[Axes] = None):
+    """Shard every batch leaf on its leading (batch) dim when divisible.
+
+    ``positions`` is per-sequence (not per-sample) and stays replicated.
+    """
+
+    def rule(path, leaf):
+        if _path_names(path)[-1] == "positions":
+            return P(*([None] * len(leaf.shape)))
+        lead = _dp_or_none(axes, dp, leaf.shape[0]) if axes else dp
+        return P(lead, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch)
+
+
+def cache_pspecs(caches, dp: Tuple[str, ...], axes: Axes):
+    """Caches: layer-stacked leaves (n, B, ...); shard batch + KV heads.
+
+    KV head counts that do not divide the model axis (e.g. 8 GQA heads on a
+    16-way axis) fall back to sharding head_dim — the KV cache is by far
+    the largest decode buffer, so leaving it only data-sharded would blow
+    per-device HBM at decode_32k.
+    """
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        shape = tuple(leaf.shape)
+        spec = [None] * len(shape)
+        if len(shape) >= 2:
+            spec[1] = _dp_or_none(axes, dp, shape[1])
+        if names[-1] in ("k", "v") and len(shape) == 5:
+            # (n, B, L, KH, hd): prefer heads, fall back to head_dim
+            head_ax = _axis(axes, "model", shape[3])
+            if head_ax:
+                spec[3] = head_ax
+            else:
+                spec[4] = _axis(axes, "model", shape[4])
+        if names[-1] == "ckv" and len(shape) == 4:  # MLA latent (n,B,L,c)
+            spec[3] = _axis(axes, "model", shape[3])
+        if names[-1] == "state" and len(shape) == 5:  # mamba (n,B,H,P,N)
+            spec[2] = _axis(axes, "model", shape[2])
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, caches)
+
+
+def state_pspecs(state, axes: Axes, *, fsdp: bool = False):
+    """Specs for a TrainState(params, opt, step)."""
+    import dataclasses
+
+    pspecs = param_pspecs(state.params, axes, fsdp=fsdp)
+    return type(state)(params=pspecs,
+                       opt=opt_pspecs(state.opt, pspecs),
+                       step=P())
+
+
+def mesh_axes(mesh) -> Axes:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

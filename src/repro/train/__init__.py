@@ -1,0 +1,6 @@
+from repro.train.loop import (TrainState, init_state, make_train_step,
+                              train_loop)
+from repro.train.losses import composite_loss, cross_entropy
+
+__all__ = ["TrainState", "init_state", "make_train_step", "train_loop",
+           "composite_loss", "cross_entropy"]

@@ -1,0 +1,147 @@
+"""Training step builder + host-side loop.
+
+``make_train_step(cfg, opt)`` returns a pure jit-able function
+``(state, batch, rng) -> (state, metrics)`` implementing the paper's
+composite objective.  The same function is what the multi-pod dry-run
+lowers for the train_4k shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+from repro.optim.schedule import warmup_cosine
+from repro.train.losses import composite_loss
+from repro.sharding import ctx as shard_ctx
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Dict[str, Any]
+    step: jnp.ndarray
+
+
+def init_state(key, cfg: ArchConfig, opt_cfg: AdamWConfig) -> TrainState:
+    params = tf.init_params(key, cfg)
+    return TrainState(params=params, opt=init_opt_state(params, opt_cfg),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, *,
+                    window: Optional[int] = None,
+                    total_steps: int = 10000,
+                    warmup_steps: int = 100,
+                    grad_accum: int = 1,
+                    accum_dtype: str = "float32") -> Callable:
+    """Build the jit-able train step.
+
+    ``grad_accum`` > 1 splits the global batch into microbatches processed
+    by a lax.scan with gradient accumulation — the standard lever for
+    fitting per-step activation memory (EXPERIMENTS.md §Perf: 256x4k tokens
+    do not fit at once even with remat + flash-vjp attention).
+
+    ``accum_dtype="bfloat16"`` accumulates in bf16: XLA sinks an fp32
+    accumulator's convert into the backward scan and materializes fp32
+    copies of every saved layer input (~2x residual memory, measured
+    +9 GiB/dev on deepseek-v2; EXPERIMENTS.md SSPerf A6).  bf16
+    accumulation of <=16 microbatches costs ~0.4% relative gradient error
+    before the fp32 Adam update.
+    """
+    alpha = cfg.split.quant.commit_alpha
+
+    def loss_fn(params, batch, rng):
+        logits, aux = tf.forward(params, cfg, batch, rng=rng, window=window)
+        return composite_loss(logits, batch, aux, alpha)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch, rng):
+        if grad_accum <= 1:
+            (_, metrics), grads = grad_fn(params, batch, rng)
+            return grads, metrics
+
+        def to_micro(x):
+            return x.reshape((grad_accum, x.shape[0] // grad_accum)
+                             + x.shape[1:])
+
+        # positions are per-sequence, not per-sample: broadcast, don't split
+        positions = batch.get("positions")
+        micro = jax.tree_util.tree_map(
+            to_micro, {k: v for k, v in batch.items() if k != "positions"})
+
+        def body(carry, mb):
+            grads_acc, metrics_acc, rng = carry
+            rng, sub = jax.random.split(rng)
+            mb = shard_ctx.constrain_batch_tree(mb)
+            if positions is not None:
+                mb = dict(mb, positions=positions)
+            (_, metrics), grads = grad_fn(params, mb, sub)
+            # pin per-microbatch grads + the fp32 accumulator to the param
+            # (FSDP) sharding: reduce-scatter instead of all-reduce, and a
+            # 16x smaller accumulator (EXPERIMENTS.md SSPerf A3)
+            grads = shard_ctx.constrain_like_params(grads)
+            acc_dt = jnp.bfloat16 if accum_dtype == "bfloat16" \
+                else jnp.float32
+            grads_acc = shard_ctx.constrain_like_params(
+                jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(acc_dt), grads_acc, grads))
+            metrics_acc = jax.tree_util.tree_map(
+                lambda a, m: a + m / grad_accum, metrics_acc, metrics)
+            return (grads_acc, metrics_acc, rng), None
+
+        acc_dt0 = jnp.bfloat16 if accum_dtype == "bfloat16" \
+            else jnp.float32
+        zeros_like_f32 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, acc_dt0), params)
+        metrics0 = dict(loss=0.0, ce=0.0, commit=0.0, load_balance=0.0,
+                        drop_fraction=0.0)
+        metrics0 = {k: jnp.zeros((), jnp.float32) for k in metrics0}
+        (grads, metrics, _), _ = jax.lax.scan(
+            body, (zeros_like_f32, metrics0, rng), micro)
+        grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch: Dict,
+                   rng: jax.Array) -> Tuple[TrainState, Dict]:
+        grads, metrics = compute_grads(state.params, batch, rng)
+        lr_scale = warmup_cosine(state.step, warmup_steps=warmup_steps,
+                                 total_steps=total_steps)
+        new_params, new_opt, opt_metrics = adamw_update(
+            state.params, grads, state.opt, opt_cfg, lr_scale)
+        metrics.update(opt_metrics)
+        return TrainState(params=new_params, opt=new_opt,
+                          step=state.step + 1), metrics
+
+    return train_step
+
+
+def train_loop(cfg: ArchConfig, opt_cfg: AdamWConfig, data_iter, *,
+               n_steps: int, seed: int = 0, log_every: int = 10,
+               window: Optional[int] = None,
+               callback: Optional[Callable[[int, Dict], None]] = None
+               ) -> Tuple[TrainState, list]:
+    """Single-host training loop (examples / Table-3 benchmarks)."""
+    key = jax.random.PRNGKey(seed)
+    state = init_state(key, cfg, opt_cfg)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, window=window,
+                                      total_steps=n_steps))
+    history = []
+    for i in range(n_steps):
+        batch = next(data_iter)
+        key, sub = jax.random.split(key)
+        state, metrics = step_fn(state, batch, sub)
+        if i % log_every == 0 or i == n_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append((i, m))
+            if callback:
+                callback(i, m)
+    return state, history

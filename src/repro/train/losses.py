@@ -1,0 +1,44 @@
+"""Loss functions: masked CE + the paper's composite split-learning loss.
+
+L(Y, Y_hat) = CrossEntropy(Y, Y_hat) + alpha * L_comm      (Section 3.2.2)
+
+plus standard MoE auxiliaries (load-balance, router-z) for the MoE
+architectures.  Labels == IGNORE (-100) are masked (image positions in VLM
+sequences, padding).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+IGNORE = -100
+MOE_LB_COEF = 0.01
+MOE_Z_COEF = 1e-3
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Masked mean CE.  logits (..., V); labels (...,) int with IGNORE."""
+    mask = (labels != IGNORE).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+def composite_loss(logits: jnp.ndarray, batch: Dict, aux: Dict,
+                   commit_alpha: float) -> Tuple[jnp.ndarray, Dict]:
+    """Paper loss + MoE auxiliaries.  Handles text/vlm/audio label layouts."""
+    if "labels_codes" in batch:  # audio: logits (B,S,K,V), labels (B,K,S)
+        labels = batch["labels_codes"].transpose(0, 2, 1)  # (B,S,K)
+        ce = cross_entropy(logits, labels)
+    else:
+        ce = cross_entropy(logits, batch["labels"])
+    loss = ce + commit_alpha * aux["commit"]
+    loss = loss + MOE_LB_COEF * aux["load_balance"] + \
+        MOE_Z_COEF * aux["router_z"]
+    metrics = dict(loss=loss, ce=ce, commit=aux["commit"],
+                   load_balance=aux["load_balance"],
+                   drop_fraction=aux["drop_fraction"])
+    return loss, metrics

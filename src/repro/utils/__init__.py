@@ -1,0 +1,3 @@
+from repro.utils.tree import tree_bytes, tree_count, cast_tree, ste
+
+__all__ = ["tree_bytes", "tree_count", "cast_tree", "ste"]

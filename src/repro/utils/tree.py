@@ -1,0 +1,40 @@
+"""Small pytree / numeric helpers shared across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of all array leaves in a pytree."""
+    return sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+        if hasattr(x, "dtype")
+    )
+
+
+def tree_count(tree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(
+        x.size for x in jax.tree_util.tree_leaves(tree) if hasattr(x, "shape")
+    )
+
+
+def cast_tree(tree, dtype):
+    """Cast every inexact array leaf to ``dtype`` (ints are left alone)."""
+    def _cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.inexact):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map(_cast, tree)
+
+
+def ste(x: jax.Array, x_hat: jax.Array) -> jax.Array:
+    """Straight-through estimator.
+
+    Forward value is ``x_hat``; the backward pass treats the
+    quantize/dequantize round trip as identity (paper Eq. 1-3).
+    """
+    return x + jax.lax.stop_gradient(x_hat - x)

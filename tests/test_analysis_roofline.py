@@ -1,0 +1,103 @@
+"""HLO analysis parser + roofline/param-count sanity checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.hlo_analysis import analyze, split_computations
+from repro.launch.roofline import derive_roofline, param_counts
+from repro.launch.shapes import SHAPES, input_specs, window_for
+
+
+def test_dot_flops_counted_with_loop_trips():
+    """flops of a matmul inside a scan must be multiplied by trip count."""
+    w = jnp.zeros((64, 64))
+
+    def f(x):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    hlo = jax.jit(f).lower(jnp.ones((32, 64))).compile().as_text()
+    res = analyze(hlo)
+    expected = 2 * 32 * 64 * 64 * 10
+    assert res["dot_flops"] == pytest.approx(expected, rel=0.01), res
+
+
+def test_collective_bytes_parsed():
+    import subprocess, sys, os, textwrap
+    # needs >1 device: check parser on a tiny psum program in-process is
+    # not possible (1 device -> no collectives); parse a synthetic HLO.
+    hlo = """HloModule m
+
+ENTRY %main (p: f32[16,128]) -> f32[16,128] {
+  %p = f32[16,128] parameter(0)
+  ROOT %ar = f32[16,128] all-reduce(%p), to_apply=%add
+}
+"""
+    total, by_op = (analyze(hlo)["collective_bytes"],
+                    analyze(hlo)["collective_by_op"])
+    assert by_op.get("all-reduce") == 16 * 128 * 4
+
+
+def test_split_computations_entry():
+    hlo = """HloModule m
+
+%helper (a: f32[2]) -> f32[2] {
+  ROOT %a = f32[2] parameter(0)
+}
+
+ENTRY %main (p: f32[4]) -> f32[4] {
+  ROOT %p = f32[4] parameter(0)
+}
+"""
+    comps, entry = split_computations(hlo)
+    assert entry == "main"
+    assert set(comps) == {"helper", "main"}
+
+
+@pytest.mark.parametrize("arch,expected_b,tol", [
+    ("llama3_2_3b", 3.2e9, 0.35),
+    ("deepseek_coder_33b", 33e9, 0.25),
+    ("granite_3_8b", 8e9, 0.35),
+    ("deepseek_v2_236b", 236e9, 0.25),
+    ("arctic_480b", 480e9, 0.25),
+    ("rwkv6_7b", 7e9, 0.35),
+])
+def test_param_counts_match_nameplate(arch, expected_b, tol):
+    total = param_counts(get_config(arch))["total"]
+    assert abs(total - expected_b) / expected_b < tol, total / 1e9
+
+
+def test_moe_active_far_below_total():
+    c = param_counts(get_config("deepseek_v2_236b"))
+    assert c["active"] < 0.2 * c["total"]  # ~21B active of 236B
+
+
+def test_roofline_terms_and_dominant():
+    res = dict(cost=dict(flops_loop_aware=197e12, bytes_out_loop_aware=0.0),
+               collective_bytes_per_device=50e9, chips=256, model_flops=0.0)
+    rl = derive_roofline(res)
+    assert rl["compute_s"] == pytest.approx(1.0)
+    assert rl["collective_s"] == pytest.approx(1.0)
+    assert rl["dominant"] in ("compute", "collective")
+
+
+@pytest.mark.parametrize("arch", ["llama3_2_3b", "rwkv6_7b", "musicgen_large",
+                                  "llava_next_34b"])
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_input_specs_no_allocation(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    specs = input_specs(cfg, shape)
+    for leaf in jax.tree_util.tree_leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+    if shape.kind == "decode":
+        assert "caches" in specs and "qpos" in specs
+        win = window_for(cfg, shape)
+        if win is not None and cfg.attn_type == "gqa":
+            side = "client" if specs["caches"]["client"] else "server"
+            k = specs["caches"][side]["seg0"]["k"]
+            assert k.shape[2] == min(shape.seq_len, win)

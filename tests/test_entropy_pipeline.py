@@ -1,0 +1,96 @@
+"""Entropy estimator (paper Section 3.3 / Appendix A) + data pipeline."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.entropy import (differential_entropy_bits,
+                                estimate_optimal_bits, optimal_bits,
+                                scott_bandwidth)
+from repro.data.pipeline import make_pipeline
+from repro.train.losses import IGNORE
+
+
+def test_gaussian_entropy():
+    """H(N(0,1)) = 0.5 log2(2 pi e) ~ 2.047 bits."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (8192,))
+    ent, _ = differential_entropy_bits(x)
+    assert abs(ent - 2.047) < 0.15
+
+
+def test_uniform_entropy():
+    """H(U[0, 4]) = log2(4) = 2 bits."""
+    x = jax.random.uniform(jax.random.PRNGKey(1), (8192,)) * 4.0
+    ent, _ = differential_entropy_bits(x)
+    assert abs(ent - 2.0) < 0.25
+
+
+def test_scaled_gaussian_shifts_entropy():
+    """H(aX) = H(X) + log2 a."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (8192,))
+    e1, _ = differential_entropy_bits(x)
+    e2, _ = differential_entropy_bits(4.0 * x)
+    assert abs((e2 - e1) - 2.0) < 0.2
+
+
+def test_optimal_bits_ceiling():
+    assert optimal_bits(1.8) == 2  # the paper's Table-1 conclusion
+    assert optimal_bits(2.3) == 3
+    assert optimal_bits(0.2) == 1
+
+
+def test_scott_rule():
+    assert abs(scott_bandwidth(1000, 1.0) -
+               (4 / 3) ** 0.2 * 1000 ** -0.2) < 1e-9
+
+
+def test_estimate_stable_across_batches():
+    """Paper Table 1: estimates agree across batches."""
+    ents = []
+    for seed in range(4):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (4096,)) * 0.8
+        b, e = estimate_optimal_bits(x)
+        ents.append(e)
+    assert max(ents) - min(ents) < 0.2
+
+
+# ---------------------------------------------------------------------------
+# pipeline
+# ---------------------------------------------------------------------------
+
+def test_text_pipeline_learnable_structure():
+    cfg = get_config("llama3_2_3b").reduced()
+    batch = next(make_pipeline(cfg, 4, 32))
+    t, l = batch["tokens"], batch["labels"]
+    assert t.shape == (4, 32) and l.shape == (4, 32)
+    # label at i is token at i+1 (teacher forcing)
+    np.testing.assert_array_equal(l[:, :-1], t[:, 1:])
+    assert (l[:, -1] == IGNORE).all()
+
+
+def test_vqa_pipeline_answers_encode_class():
+    cfg = get_config("tinyllava").reduced()
+    batch = next(make_pipeline(cfg, 4, 64))
+    assert batch["image_embeds"].shape[1] == cfg.n_image_tokens
+    labels = batch["labels"]
+    n_ans = (labels != IGNORE).sum(axis=1)
+    assert (n_ans == 4).all()  # answer_len positions supervised
+
+
+def test_audio_pipeline_shapes():
+    cfg = get_config("musicgen_large").reduced()
+    batch = next(make_pipeline(cfg, 2, 16))
+    assert batch["codes"].shape == (2, cfg.n_codebooks, 16)
+    assert batch["labels_codes"].shape == (2, cfg.n_codebooks, 16)
+    np.testing.assert_array_equal(batch["labels_codes"][:, :, :-1],
+                                  batch["codes"][:, :, 1:])
+
+
+def test_pipeline_deterministic():
+    cfg = get_config("granite_3_8b").reduced()
+    b1 = next(make_pipeline(cfg, 2, 16, seed=7))
+    b2 = next(make_pipeline(cfg, 2, 16, seed=7))
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])

@@ -1,0 +1,139 @@
+"""Pallas kernel sweeps (interpret mode) against the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.packing import unpack_bits
+from repro.core.quantizers.nf import nf_codebook
+from repro.kernels import ops, ref
+
+SHAPES = [(4, 700), (8, 1024), (3, 257), (16, 2048), (1, 64)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _x(shape, dtype, seed=0):
+    return (jax.random.normal(jax.random.PRNGKey(seed), shape) * 3.0
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RD-FSQ kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("bits", [1, 2, 4])
+def test_rdfsq_kernel_codes_exact(shape, dtype, bits):
+    x = _x(shape, dtype)
+    words, stats = ops.rdfsq_quantize(x, bits)
+    x2d = x.reshape(shape[0], -1)
+    lo, hi = ref.rdfsq_stats(x2d)
+    codes_ref = ref.rdfsq_codes_ref(x2d, lo, hi, bits)
+    n_cols = x2d.shape[1]
+    codes_kern = jax.vmap(lambda r: unpack_bits(r, bits, n_cols))(words)
+    np.testing.assert_array_equal(np.asarray(codes_kern),
+                                  np.asarray(codes_ref))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("bits", [2, 4])
+def test_rdfsq_kernel_dequant_allclose(shape, bits):
+    x = _x(shape, jnp.float32)
+    words, stats = ops.rdfsq_quantize(x, bits)
+    n_cols = int(np.prod(shape[1:]))
+    x_hat = ops.rdfsq_dequantize(words, stats, bits, n_cols)
+    # oracle with the same fp16 wire precision for (lo, hi)
+    lo = stats[:, 0:1].astype(jnp.float32)
+    hi = stats[:, 1:2].astype(jnp.float32)
+    x2d = x.reshape(shape[0], -1)
+    lo_f, hi_f = ref.rdfsq_stats(x2d)
+    codes = ref.rdfsq_codes_ref(x2d, lo_f, hi_f, bits)
+    d = 2 ** bits
+    half = (d - 1) / 2.0
+    x_ref = ((codes.astype(jnp.float32) - half) / half + 1) / 2 * \
+        (hi - lo) + lo
+    np.testing.assert_allclose(np.asarray(x_hat), np.asarray(x_ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_rdfsq_kernel_matches_core_quantizer():
+    """Kernel path reproduces core.quantizers.rdfsq reconstruction."""
+    from repro.core import QuantConfig, roundtrip
+    x = _x((4, 512), jnp.float32)
+    bits = 2
+    words, stats = ops.rdfsq_quantize(x, bits)
+    x_hat = ops.rdfsq_dequantize(words, stats, bits, 512)
+    x_core, _ = roundtrip(QuantConfig(method="rdfsq", bits=bits), x)
+    np.testing.assert_allclose(np.asarray(x_hat), np.asarray(x_core),
+                               atol=2e-2, rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# NF kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_nf_kernel_codes_exact(shape, dtype, bits):
+    x = _x(shape, dtype)
+    words, scales, aux = ops.nf_quantize(x, bits, block=64)
+    book = jnp.asarray(nf_codebook(bits), jnp.float32)
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % 64
+    blocks = jnp.pad(flat, (0, pad)).reshape(-1, 64)
+    pw, _, _ = ref.nf_quantize_ref(blocks, book, bits)
+    np.testing.assert_array_equal(np.asarray(words), np.asarray(pw))
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+@pytest.mark.parametrize("double_quant", [False, True])
+def test_nf_kernel_dequant(bits, double_quant):
+    """Kernel dequant == oracle dequant at the same wire precision."""
+    x = _x((4, 700), jnp.float32)
+    n = x.size
+    words, scales, aux = ops.nf_quantize(x, bits, block=64,
+                                         double_quant=double_quant)
+    x_hat = ops.nf_dequantize(words, scales, aux, bits, n, block=64,
+                              double_quant=double_quant)
+    book = jnp.asarray(nf_codebook(bits), jnp.float32)
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % 64
+    blocks = jnp.pad(flat, (0, pad)).reshape(-1, 64)
+    pw, m, rng = ref.nf_quantize_ref(blocks, book, bits)
+    m16 = m.astype(jnp.float16).astype(jnp.float32)
+    rng16 = rng.astype(jnp.float16).astype(jnp.float32)  # kernel emits fp16
+    if double_quant:
+        gq = 256
+        nb = rng16.shape[0]
+        gpad = (-nb) % gq
+        groups = jnp.pad(rng16, ((0, gpad), (0, 0))).reshape(-1, gq)
+        gscale = jnp.max(jnp.abs(groups), axis=-1, keepdims=True)
+        codes = jnp.round(groups / (gscale + 1e-8) * 255.0)
+        gscale16 = gscale.astype(jnp.float16).astype(jnp.float32)
+        rng_used = (codes / 255.0 * gscale16).reshape(-1, 1)[:nb]
+        rng_used = rng_used.astype(jnp.float16).astype(jnp.float32)
+    else:
+        rng_used = rng16
+    xr = ref.nf_dequantize_ref(pw, m16, rng_used, book, bits,
+                               64).reshape(-1)[:n]
+    np.testing.assert_allclose(np.asarray(x_hat), np.asarray(xr),
+                               atol=2e-3, rtol=1e-3)
+    # and the reconstruction is genuinely close to the data at 4 bits
+    if bits == 4:
+        rmse = float(jnp.sqrt(jnp.mean((x_hat - flat) ** 2)))
+        assert rmse < 0.5
+
+
+def test_nf_kernel_matches_core_quantizer():
+    from repro.core import QuantConfig, roundtrip
+    x = _x((4, 512), jnp.float32)
+    bits = 4
+    words, scales, aux = ops.nf_quantize(x, bits, block=64)
+    x_hat = ops.nf_dequantize(words, scales, aux, bits, x.size,
+                              block=64).reshape(x.shape)
+    x_core, _ = roundtrip(
+        QuantConfig(method="nf", bits=bits, block_size=64), x)
+    np.testing.assert_allclose(np.asarray(x_hat), np.asarray(x_core),
+                               atol=0.1, rtol=5e-2)

@@ -1,0 +1,165 @@
+"""Sequence-mixer layers: chunked forms vs exact recurrences; MoE; MLA."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import mamba2, mla, rwkv6
+from repro.models.layers.moe import init_moe_params, moe_forward
+
+
+# ---------------------------------------------------------------------------
+# Mamba2: chunked SSD == step-by-step recurrence
+# ---------------------------------------------------------------------------
+
+def test_mamba2_chunked_matches_decode_recurrence():
+    d_model, expand, hd, ds = 32, 2, 16, 8
+    key = jax.random.PRNGKey(0)
+    p = mamba2.init_mamba2_params(key, d_model, expand=expand, headdim=hd,
+                                  d_state=ds)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, d_model)) * 0.5
+    full = mamba2.mamba2_forward(p, x, expand=expand, headdim=hd, d_state=ds,
+                                 chunk=8)
+    cache = mamba2.init_mamba2_cache(2, d_model, expand=expand, headdim=hd,
+                                     d_state=ds)
+    outs = []
+    for t in range(24):
+        y, cache = mamba2.mamba2_decode(p, x[:, t:t + 1], cache,
+                                        expand=expand, headdim=hd,
+                                        d_state=ds)
+        outs.append(y)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                               atol=2e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 24])
+def test_mamba2_chunk_size_invariant(chunk):
+    d_model = 32
+    p = mamba2.init_mamba2_params(jax.random.PRNGKey(0), d_model,
+                                  expand=2, headdim=16, d_state=8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, d_model)) * 0.5
+    ref = mamba2.mamba2_forward(p, x, expand=2, headdim=16, d_state=8,
+                                chunk=24)
+    out = mamba2.mamba2_forward(p, x, expand=2, headdim=16, d_state=8,
+                                chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6: chunked WKV == exact recurrence oracle
+# ---------------------------------------------------------------------------
+
+def test_wkv_chunked_matches_recurrent():
+    b, s, h, dk = 2, 40, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    r = jax.random.normal(ks[0], (b, s, h, dk))
+    k = jax.random.normal(ks[1], (b, s, h, dk))
+    v = jax.random.normal(ks[2], (b, s, h, dk))
+    log_w = -jnp.exp(jax.random.normal(ks[3], (b, s, h, dk)) - 2.0)
+    log_w = jnp.clip(log_w, -rwkv6.DECAY_CLAMP, 0.0)
+    u = jax.random.normal(ks[4], (h, dk)) * 0.1
+    y_c, s_c = rwkv6.wkv_chunked(r, k, v, log_w, u, chunk=16)
+    y_r, s_r = rwkv6.wkv_recurrent(r, k, v, log_w, u)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_r), atol=1e-3,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_r), atol=1e-3,
+                               rtol=1e-3)
+
+
+def test_rwkv6_forward_matches_decode():
+    d_model, hd = 64, 16
+    p = rwkv6.init_rwkv6_params(jax.random.PRNGKey(0), d_model, hd)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, d_model)) * 0.5
+    full = rwkv6.rwkv6_forward(p, x, head_dim=hd, chunk=4)
+    cache = rwkv6.init_rwkv6_cache(2, d_model, hd)
+    outs = []
+    for t in range(12):
+        y, cache = rwkv6.rwkv6_decode(p, x[:, t:t + 1], cache, head_dim=hd)
+        outs.append(y)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                               atol=2e-3, rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def test_moe_routes_and_balances():
+    d, e, f = 16, 4, 32
+    p = init_moe_params(jax.random.PRNGKey(0), d, e, f)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, d))
+    y, aux = moe_forward(p, x, top_k=2, capacity_factor=2.0)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(aux["load_balance"]) >= 1.0 - 1e-3  # >= 1 by Cauchy-Schwarz
+    assert float(aux["drop_fraction"]) <= 0.5
+
+
+def test_moe_no_drops_at_high_capacity():
+    d, e, f = 16, 4, 32
+    p = init_moe_params(jax.random.PRNGKey(0), d, e, f)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, d))
+    _, aux = moe_forward(p, x, top_k=2, capacity_factor=8.0)
+    assert float(aux["drop_fraction"]) == 0.0
+
+
+def test_moe_matches_dense_mixture_at_full_capacity():
+    """With no drops, sort-based dispatch == brute-force weighted experts."""
+    d, e, f, k = 8, 4, 16, 2
+    p = init_moe_params(jax.random.PRNGKey(0), d, e, f)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 6, d))
+    y, _ = moe_forward(p, x, top_k=k, capacity_factor=8.0)
+
+    xf = x.reshape(-1, d)
+    logits = xf @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gv, ei = jax.lax.top_k(probs, k)
+    gv = gv / gv.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(xf)
+    for t in range(xf.shape[0]):
+        acc = jnp.zeros((d,))
+        for j in range(k):
+            eidx = int(ei[t, j])
+            gate = jax.nn.silu(xf[t] @ p["w_gate"][eidx])
+            up = xf[t] @ p["w_up"][eidx]
+            acc = acc + gv[t, j] * ((gate * up) @ p["w_down"][eidx])
+        ref = ref.at[t].set(acc)
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, d)),
+                               np.asarray(ref), atol=1e-4, rtol=1e-3)
+
+
+def test_moe_shared_and_dense_residual():
+    d, e, f = 8, 4, 16
+    p = init_moe_params(jax.random.PRNGKey(0), d, e, f, n_shared_experts=1,
+                        dense_residual_d_ff=32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, d))
+    y, _ = moe_forward(p, x, top_k=2)
+    assert y.shape == x.shape and bool(jnp.all(jnp.isfinite(y)))
+
+
+# ---------------------------------------------------------------------------
+# MLA: absorbed decode == materialized forward
+# ---------------------------------------------------------------------------
+
+def test_mla_decode_matches_forward():
+    d_model, h = 32, 4
+    kw = dict(kv_lora_rank=8, qk_nope_dim=8, qk_rope_dim=4, v_head_dim=8)
+    p = mla.init_mla_params(jax.random.PRNGKey(0), d_model, h,
+                            q_lora_rank=16, **kw)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, d_model)) * 0.5
+    positions = jnp.arange(10)
+    full = mla.mla_forward(p, x, n_heads=h, rope_theta=1e4,
+                           positions=positions, **kw)
+    cache = mla.init_mla_cache(2, 10, kw["kv_lora_rank"], kw["qk_rope_dim"],
+                               jnp.float32)
+    outs = []
+    for t in range(10):
+        y, cache = mla.mla_decode(p, x[:, t:t + 1], cache, n_heads=h,
+                                  rope_theta=1e4,
+                                  qpos=jnp.full((2,), t, jnp.int32), **kw)
+        outs.append(y)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                               atol=2e-4, rtol=1e-3)

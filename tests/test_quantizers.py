@@ -1,0 +1,207 @@
+"""Unit + property tests for the paper's compression methods."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (QuantConfig, bits_per_scalar, decode, encode,
+                        roundtrip)
+from repro.core.packing import pack_bits, packed_size, storage_bits, \
+    unpack_bits
+from repro.core.quantizers.nf import nf_codebook
+
+METHODS = ["fsq", "rdfsq", "nf", "topk"]
+
+
+def _x(shape=(4, 64, 32), scale=2.0, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(bits=st.sampled_from([1, 2, 3, 4, 8]),
+       n=st.integers(min_value=1, max_value=300),
+       seed=st.integers(min_value=0, max_value=2 ** 16))
+def test_pack_roundtrip_exact(bits, n, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 2 ** bits, size=(n,)).astype(np.uint8)
+    words = pack_bits(jnp.asarray(codes), bits)
+    assert words.shape[0] == packed_size(n, bits)
+    back = unpack_bits(words, bits, n)
+    np.testing.assert_array_equal(np.asarray(back), codes)
+
+
+def test_storage_bits():
+    assert [storage_bits(b) for b in (1, 2, 3, 4, 5, 8)] == \
+        [1, 2, 4, 4, 8, 8]
+
+
+# ---------------------------------------------------------------------------
+# wire form == in-graph form
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("bits", [1, 2, 4])
+def test_roundtrip_matches_wire(method, bits):
+    cfg = QuantConfig(method=method, bits=bits)
+    x = _x()
+    rng = jax.random.PRNGKey(1)
+    p = encode(cfg, x, rng)
+    x_wire = decode(cfg, p)
+    x_rt, _ = roundtrip(cfg, x, rng)
+    np.testing.assert_allclose(np.asarray(x_wire), np.asarray(x_rt),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("method,bits", [("fsq", 2), ("rdfsq", 2),
+                                         ("nf", 2)])
+def test_bits_per_scalar_near_nominal(method, bits):
+    cfg = QuantConfig(method=method, bits=bits)
+    x = _x((8, 64, 64))
+    p = encode(cfg, x)
+    bps = bits_per_scalar(p, x.size)
+    # side-info overhead must be small (NF blockwise is the largest)
+    assert bits <= bps < bits + 0.7
+
+
+def test_identity_is_16bit():
+    cfg = QuantConfig(method="identity")
+    x = _x()
+    p = encode(cfg, x)
+    assert bits_per_scalar(p, x.size) == 16.0
+
+
+# ---------------------------------------------------------------------------
+# fidelity ordering (paper Section 3.2.2 claims)
+# ---------------------------------------------------------------------------
+
+def _rmse(a, b):
+    return float(jnp.sqrt(jnp.mean((a - b) ** 2)))
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_rdfsq_beats_fsq(bits):
+    """Linear scaling + exact range inversion must beat tanh saturation.
+
+    (RMSE ordering holds for bits >= 2; at 1 bit RD-FSQ reconstructs to the
+    clipped range endpoints, so its RMSE on Gaussian data is worse even
+    though the paper's *task* metrics favor it — see Table 3.)"""
+    x = _x((8, 32, 64), scale=3.0)
+    e_fsq = _rmse(roundtrip(QuantConfig(method="fsq", bits=bits), x)[0], x)
+    e_rd = _rmse(roundtrip(QuantConfig(method="rdfsq", bits=bits), x)[0], x)
+    assert e_rd < e_fsq
+
+
+def test_more_bits_less_error():
+    x = _x()
+    for method in ("rdfsq", "nf", "fsq"):
+        errs = [_rmse(roundtrip(QuantConfig(method=method, bits=b), x)[0], x)
+                for b in (1, 2, 4, 8)]
+        assert errs == sorted(errs, reverse=True), (method, errs)
+
+
+def test_rdfsq_error_bounded_by_bin():
+    """Quantization error within the clipped range <= one bin width."""
+    cfg = QuantConfig(method="rdfsq", bits=4, clip_sigma=100.0)  # no clip
+    x = _x((4, 256))
+    x_hat, _ = roundtrip(cfg, x)
+    lo = x.min(axis=1, keepdims=True)
+    hi = x.max(axis=1, keepdims=True)
+    bin_w = (hi - lo) / (2 ** 4 - 1)
+    assert float(jnp.max(jnp.abs(x_hat - x) / bin_w)) < 1.01
+
+
+# ---------------------------------------------------------------------------
+# STE + commitment loss
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", METHODS)
+def test_ste_gradient_is_identity(method):
+    cfg = QuantConfig(method=method, bits=2, commit_alpha=0.0)
+    x = _x((2, 32))
+
+    def f(x):
+        y, _ = roundtrip(cfg, x, jax.random.PRNGKey(0))
+        return jnp.sum(y * 3.0)
+
+    g = jax.grad(f)(x)
+    np.testing.assert_allclose(np.asarray(g), 3.0, atol=1e-5)
+
+
+def test_commitment_loss_positive_and_differentiable():
+    cfg = QuantConfig(method="rdfsq", bits=1)
+    x = _x((4, 128))
+
+    def f(x):
+        _, commit = roundtrip(cfg, x)
+        return commit
+
+    val = f(x)
+    assert 0.0 < float(val) < 2.0
+    g = jax.grad(f)(x)
+    assert float(jnp.max(jnp.abs(g))) > 0.0  # flows into the client
+
+
+def test_commitment_smaller_at_higher_bits():
+    x = _x((4, 256))
+    c1 = float(roundtrip(QuantConfig(method="rdfsq", bits=1), x)[1])
+    c4 = float(roundtrip(QuantConfig(method="rdfsq", bits=4), x)[1])
+    assert c4 < c1
+
+
+# ---------------------------------------------------------------------------
+# NF codebook properties
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4])
+def test_nf_codebook(bits):
+    book = np.asarray(nf_codebook(bits))
+    assert book.shape == (2 ** bits,)
+    assert np.all(np.diff(book) > 0)  # strictly increasing
+    assert 0.0 in book  # exact zero representable
+    assert book.min() >= -1.0 and book.max() <= 1.0
+    assert book.max() == 1.0
+
+
+def test_nf4_matches_qlora_reference():
+    """NF4 levels close to Dettmers et al. published NF4 values."""
+    ref = np.array([-1.0, -0.6961928, -0.5250731, -0.39491748, -0.28444138,
+                    -0.18477343, -0.09105003, 0.0, 0.07958029, 0.16093019,
+                    0.24611232, 0.33791524, 0.44070983, 0.5626170,
+                    0.72295684, 1.0])
+    book = np.asarray(nf_codebook(4))
+    np.testing.assert_allclose(book, ref, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: quantize(dequantize(quantize(x))) stability
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), bits=st.sampled_from([2, 4]),
+       method=st.sampled_from(["rdfsq", "nf"]))
+def test_double_quantize_idempotent(seed, bits, method):
+    """Re-quantizing a reconstruction reproduces (nearly) the same values."""
+    cfg = QuantConfig(method=method, bits=bits)
+    x = _x((2, 64), seed=seed)
+    y1, _ = roundtrip(cfg, x)
+    y2, _ = roundtrip(cfg, y1)
+    assert _rmse(y1, y2) < 0.25 * _rmse(x, y1) + 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_topk_preserves_largest(seed):
+    cfg = QuantConfig(method="topk", bits=2, rand_frac=0.0)
+    x = _x((2, 64), seed=seed)
+    x_hat, _ = roundtrip(cfg, x, jax.random.PRNGKey(seed))
+    flat = np.abs(np.asarray(x).reshape(2, -1))
+    kept = np.asarray(x_hat).reshape(2, -1) != 0
+    k = kept[0].sum()
+    for b in range(2):
+        top_idx = np.argsort(-flat[b])[:k]
+        assert kept[b][top_idx].all()
