@@ -41,6 +41,8 @@ _CONST_RE = re.compile(r"constant\((\d+)\)")
 _DOT_OUT_RE = re.compile(r"=\s*((?:\([^=]*?\))|(?:[\w\[\],{}]+))\s+dot\(")
 _LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _OPERAND_RE = re.compile(r"dot\(\s*%?([\w\.\-]+)\s*,")
+_DOT_ARGS_RE = re.compile(r"dot\(([^)]*)\)")
+_TRIP_BC_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"(\d+)"')
 
 
 def _shape_elems_bytes(text: str) -> Tuple[int, int]:
@@ -107,16 +109,29 @@ def _dot_flops(line: str, out_shapes: Dict[str, str]) -> float:
         return 0.0
     out_elems, _ = _shape_elems_bytes(m_out.group(1))
     contract = 1
-    m_lhs = _OPERAND_RE.search(line)
+    lhs_dims = None
+    # modern HLO prints operands with inline shapes:
+    #   dot(f32[32,64]{1,0} %lhs, f32[64,64]{1,0} %rhs), ...
+    # so the first shape inside the call IS the lhs shape.
+    m_args = _DOT_ARGS_RE.search(line)
+    if m_args:
+        sm = _SHAPE_RE.search(m_args.group(1))
+        if sm:
+            lhs_dims = [int(d) for d in sm.group(2).split(",") if d]
+    if lhs_dims is None:
+        # older shape-less operand format: dot(%lhs, %rhs) — resolve the
+        # operand's shape through the per-module result map.
+        m_lhs = _OPERAND_RE.search(line)
+        if m_lhs:
+            dims_txt = _SHAPE_RE.search(out_shapes.get(m_lhs.group(1), ""))
+            if dims_txt:
+                lhs_dims = [int(d) for d in dims_txt.group(2).split(",")
+                            if d]
     m_dims = _LHS_CONTRACT_RE.search(line)
-    if m_lhs and m_dims:
-        lhs_shape = out_shapes.get(m_lhs.group(1), "")
-        dims_txt = _SHAPE_RE.search(lhs_shape)
-        if dims_txt:
-            dims = [int(d) for d in dims_txt.group(2).split(",") if d]
-            for idx in m_dims.group(1).split(","):
-                if idx and int(idx) < len(dims):
-                    contract *= dims[int(idx)]
+    if lhs_dims and m_dims:
+        for idx in m_dims.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
     return 2.0 * out_elems * contract
 
 
@@ -182,11 +197,19 @@ def analyze(hlo: str) -> Dict:
     # write HBM (the fusion instruction's own output already counted).
     edges: Dict[str, List[Tuple[str, int, bool]]] = defaultdict(list)
     for name, lines in comps.items():
+        for line in lines:
+            m_while = _WHILE_RE.search(line)
+            if m_while:
+                cond, body = m_while.groups()
+                # XLA annotates resolved loops with known_trip_count in
+                # the while's backend_config; fall back to the largest
+                # integer constant in the condition computation.
+                m_bc = _TRIP_BC_RE.search(line)
+                trips = int(m_bc.group(1)) if m_bc else \
+                    _trip_count(comps.get(cond, []))
+                edges[name].append((body, trips, True))
+                edges[name].append((cond, trips, True))
         text = "\n".join(lines)
-        for cond, body in _WHILE_RE.findall(text):
-            trips = _trip_count(comps.get(cond, []))
-            edges[name].append((body, trips, True))
-            edges[name].append((cond, trips, True))
         for child in _CALL_RE.findall(text):
             edges[name].append((child, 1, False))
         for child in _CALLS_RE.findall(text):

@@ -38,6 +38,7 @@ from repro.configs import get_config
 from repro.configs.base import ArchConfig
 from repro.core.quantizers import QuantConfig
 from repro.core.split import quantized_ship
+from repro.models import stack as stack_mod
 from repro.models import transformer as tf
 from repro.models.layers import embedding as emb_mod
 from repro.models.layers.norms import rms_norm
@@ -111,9 +112,11 @@ def build_pipeline_step(cfg: ArchConfig, mesh, qcfg: QuantConfig,
             def body(h, p):
                 h, _, _ = tf.block_forward(cfg, "dense", p, h,
                                            positions=positions, window=None)
-                return h, None
+                return h, ({}, None)
 
-            x, _ = jax.lax.scan(body, x, my_blocks)
+            x, _, _ = stack_mod.run_stack(body, x, my_blocks,
+                                          remat=cfg.remat,
+                                          remat_group=cfg.remat_group)
             return x
 
         def tick(carry, tok):

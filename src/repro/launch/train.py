@@ -22,11 +22,20 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--method", default=None,
-                    help="compressor: fsq|rdfsq|nf|topk|identity")
+                    help="compressor method: any registered quantizer "
+                         "(fsq|rdfsq|nf|topk|identity) or 'none' to "
+                         "disable the cut")
     ap.add_argument("--bits", type=int, default=None)
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--remat", dest="remat", action="store_true",
+                    default=None, help="force layer remat on")
+    ap.add_argument("--no-remat", dest="remat", action="store_false",
+                    help="force layer remat off")
+    ap.add_argument("--remat-group", type=int, default=None,
+                    help=">1 enables two-level (sqrt-L) checkpointing "
+                         "with this group size")
     ap.add_argument("--mesh", default=None,
                     help="DxM fake-device mesh, e.g. 4x2")
     ap.add_argument("--ckpt", default=None)
@@ -54,6 +63,11 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
     if args.method:
+        from repro.core.quantizers import methods
+        known = sorted(set(methods()) | {"none"})
+        if args.method not in known:
+            ap.error(f"--method {args.method!r} is not a registered "
+                     f"quantizer (choose from {', '.join(known)})")
         split = dataclasses.replace(
             cfg.split, quant=QuantConfig(method=args.method,
                                          bits=args.bits or 2),
@@ -64,7 +78,8 @@ def main():
     key = jax.random.PRNGKey(0)
     state = init_state(key, cfg, opt_cfg)
     step = make_train_step(cfg, opt_cfg, total_steps=args.steps,
-                           grad_accum=args.grad_accum)
+                           grad_accum=args.grad_accum, remat=args.remat,
+                           remat_group=args.remat_group)
     data = make_pipeline(cfg, args.batch, args.seq)
 
     if args.mesh:
@@ -77,10 +92,15 @@ def main():
             lambda s: NamedSharding(mesh, s), t,
             is_leaf=lambda x: isinstance(x, P))
         sample = next(data)
+        # out_shardings must pin the returned state to the SAME specs as
+        # the input state: left to the compiler, step N's output sharding
+        # can differ from the declared in_shardings and the step N+1 call
+        # fails with a sharding mismatch.
         step_fn = jax.jit(step, in_shardings=(
             named(st_specs),
             named(batch_pspecs(sample, ("data",), axes)),
-            NamedSharding(mesh, P())))
+            NamedSharding(mesh, P())),
+            out_shardings=(named(st_specs), NamedSharding(mesh, P())))
         ctx = mesh
     else:
         step_fn = jax.jit(step)

@@ -63,11 +63,27 @@ def init_moe_params(key, d_model: int, n_experts: int, d_ff: int, *,
 
 def moe_aux_losses(logits: jnp.ndarray, probs: jnp.ndarray,
                    expert_ids: jnp.ndarray, n_experts: int) -> Dict:
-    counts = jnp.zeros((n_experts,), jnp.float32).at[
-        expert_ids.reshape(-1)].add(1.0)
-    frac_tokens = counts / (expert_ids.size + 1e-9)
-    frac_probs = probs.reshape(-1, n_experts).mean(axis=0)
-    load_balance = n_experts * jnp.sum(frac_tokens * frac_probs)
+    """Switch-style load balance + router z-loss.
+
+    ``load_balance = E * mean_t(mean prob of token t's top-k experts)``.
+    The expert fraction and the router prob MUST be coupled per token
+    (not averaged over tokens separately and then dotted — that version
+    has no lower bound and dips below 1 from sampling noise): each
+    token's k selected probs are its k largest, so their mean is >= the
+    all-expert mean 1/E, giving ``load_balance >= 1`` for ANY router
+    (Cauchy-Schwarz / Chebyshev sum), with equality iff the router is
+    uniform.  Dropped-by-capacity tokens are intentionally included —
+    the router chose them, so they must count toward balance pressure.
+
+    Balance pressure is preserved: d(loss)/d(prob of expert i), summed
+    over tokens, is E/(T*k) * count_i = E * frac_i — the same per-expert
+    aggregate down-pressure as the classic Switch E*sum(frac_i*mean_p_i)
+    term (whose gradient wrt mean_p_i is E*frac_i), so overloaded
+    experts are pushed down proportionally to their actual load.
+    """
+    sel_probs = jnp.take_along_axis(probs, expert_ids, axis=-1).astype(
+        jnp.float32)  # (..., K): router prob of each selected expert
+    load_balance = n_experts * jnp.mean(sel_probs)
     z = jax.nn.logsumexp(logits, axis=-1)
     z_loss = jnp.mean(z * z)
     return dict(load_balance=load_balance, router_z=z_loss)

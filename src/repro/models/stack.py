@@ -1,0 +1,113 @@
+"""Unified layer-stack executor.
+
+Every consecutive run of identical blocks in the decoder is stored with a
+leading layer axis and executed as ONE ``lax.scan`` — one trace per
+segment instead of one per layer, which keeps 62-layer dry-run compiles
+tractable.  Before this module the scan/remat/cache plumbing was
+duplicated (with slightly different bugs) across ``transformer.forward``'s
+client and server halves, the split pipeline stages and the decode path.
+This is now the single place that knows how to run a stacked segment.
+
+Execution policies, selected by keyword arguments of :func:`run_stack`:
+
+* **plain scan** — ``remat=False``: one forward scan, cheapest compile.
+* **single-level remat** — ``remat=True``: the per-layer body is wrapped
+  in ``jax.checkpoint`` so the backward pass stores only layer inputs.
+* **two-level (sqrt-L) remat** — ``remat=True, remat_group=k>1``: layers
+  are grouped into chunks of ``k``; both the group scan and the per-layer
+  body are checkpointed, so the backward stores ``n/k`` group inputs plus
+  the ``k`` layer inputs of the group in flight instead of all ``n``
+  layer inputs.  Remainder layers (``n % k``) run through the
+  single-level path, so prime segment lengths still group.
+* **cache collection** — ``collect=True``: the scan also stacks the
+  per-layer cache outputs (KV / SSM state) for the serve path.
+
+The body contract is ``body(carry, p) -> (carry, (aux, cache))`` where
+``aux`` is a pytree of per-layer scalars (may be ``{}``) and ``cache`` is
+``None`` unless the caller collects caches.  ``run_stack`` returns
+``(carry, aux_summed_over_layers, caches_or_None)``.
+
+Gradient safety: bodies that pin values with a barrier must use
+``repro.utils.grad_safe_barrier`` (NOT raw ``lax.optimization_barrier``,
+which has no differentiation rule) — the executor is on the hot path of
+every train step.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Body = Callable[[Any, Any], Tuple[Any, Tuple[Any, Any]]]
+
+
+def group_size(n: int, target: int = 8) -> int:
+    """Inner group size <= target for sqrt-L remat.
+
+    The ``n % k`` remainder layers run through the single-level path, so
+    prime segment lengths like 29/31 still get grouping for the bulk.
+    """
+    if n < 4:
+        return 1
+    return min(target, n)
+
+
+def stack_len(stacked) -> int:
+    """Leading (layer) axis length of a stacked parameter tree."""
+    return jax.tree_util.tree_leaves(stacked)[0].shape[0]
+
+
+def _sum_layer_axis(tree):
+    return jax.tree_util.tree_map(lambda v: jnp.sum(v, axis=0), tree)
+
+
+def _tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def run_stack(body: Body, carry, stacked, *, remat: bool = False,
+              remat_group: int = 0, collect: bool = False):
+    """Run ``body`` over the leading layer axis of ``stacked``.
+
+    Returns ``(carry, aux_sum, caches)`` — ``aux_sum`` is the per-layer
+    aux pytree summed over layers; ``caches`` is the layer-stacked cache
+    pytree when ``collect`` else ``None``.
+    """
+    n = stack_len(stacked)
+    layer = jax.checkpoint(body) if remat else body
+
+    k = group_size(n, remat_group) if remat_group > 1 else 1
+    if remat and not collect and k > 1:
+        # two-level (sqrt-L) checkpointing (EXPERIMENTS.md SSPerf A8)
+        m = (n // k) * k
+        grouped = jax.tree_util.tree_map(
+            lambda a: a[:m].reshape((m // k, k) + a.shape[1:]), stacked)
+
+        def group(c, pk):
+            c, (auxs, _) = jax.lax.scan(layer, c, pk)
+            return c, _sum_layer_axis(auxs)
+
+        carry, group_auxs = jax.lax.scan(jax.checkpoint(group), carry,
+                                         grouped)
+        aux_sum = _sum_layer_axis(group_auxs)
+        if m < n:  # remainder layers: single-level remat
+            rest = jax.tree_util.tree_map(lambda a: a[m:], stacked)
+            carry, (auxs_r, _) = jax.lax.scan(layer, carry, rest)
+            aux_sum = _tree_add(aux_sum, _sum_layer_axis(auxs_r))
+        return carry, aux_sum, None
+
+    carry, (auxs, caches) = jax.lax.scan(layer, carry, stacked)
+    return carry, _sum_layer_axis(auxs), (caches if collect else None)
+
+
+def run_decode_stack(body: Callable[[Any, Tuple[Any, Any]],
+                                    Tuple[Any, Any]],
+                     carry, stacked, caches):
+    """One-token decode over a stacked segment.
+
+    ``body(carry, (p, cache)) -> (carry, new_cache)``; scans layer params
+    and their caches in lockstep and returns ``(carry, new_caches)`` with
+    the same layer-stacked structure as ``caches``.
+    """
+    return jax.lax.scan(body, carry, (stacked, caches))

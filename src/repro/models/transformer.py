@@ -6,11 +6,12 @@ mixture-of-experts), ``mamba2`` (SSD), ``rwkv6`` (time-mix + channel-mix),
 concat(hidden, initial embedding)).
 
 Consecutive identical layers are *stacked* (leading layer axis) and executed
-with ``lax.scan`` — one trace per segment instead of one per layer, which
-keeps 62-layer dry-run compiles tractable.  The split-learning cut never
-falls inside a segment (see ``ArchConfig.segments``); the compressor
-(quantize -> wire -> dequantize, STE) runs between the client and server
-segment lists.
+through ``repro.models.stack`` — the unified stack executor that owns the
+scan / remat / sqrt-L-remat / cache-collection policies (one trace per
+segment instead of one per layer, which keeps 62-layer dry-run compiles
+tractable).  The split-learning cut never falls inside a segment (see
+``ArchConfig.segments``); the compressor (quantize -> wire -> dequantize,
+STE) runs between the client and server segment lists.
 """
 from __future__ import annotations
 
@@ -20,8 +21,10 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import utils
 from repro.configs.base import ArchConfig
 from repro.core import split as split_mod
+from repro.models import stack as stack_mod
 from repro.models.layers import attention as attn_mod
 from repro.models.layers import embedding as emb_mod
 from repro.models.layers import mamba2 as mamba_mod
@@ -126,15 +129,6 @@ def init_block_params(key, cfg: ArchConfig, block_type: str) -> Dict:
 # per-block forward (full sequence) and decode (one token)
 # ---------------------------------------------------------------------------
 
-def _inner_group(n: int, target: int = 8) -> int:
-    """Group size <= target for sqrt-L remat; the n % k remainder layers
-    run through the single-level path (prime segment lengths like 29/31
-    would otherwise get no grouping at all)."""
-    if n < 4:
-        return 1
-    return min(target, n)
-
-
 _EMPTY_AUX = dict(load_balance=jnp.zeros((), jnp.float32),
                   router_z=jnp.zeros((), jnp.float32),
                   drop_fraction=jnp.zeros((), jnp.float32))
@@ -162,8 +156,10 @@ def block_forward(cfg: ArchConfig, block_type: str, p: Dict, x: jnp.ndarray,
     # Tie positions to the layer input: without this barrier XLA hoists the
     # (layer-invariant) attention-mask computation out of the layer scan as
     # a precomputed (nq x nkv x ...) table — gigabytes per device
-    # (EXPERIMENTS.md SSPerf).
-    x, positions = jax.lax.optimization_barrier((x, positions))
+    # (EXPERIMENTS.md SSPerf).  grad_safe_barrier keeps the pin on BOTH
+    # the forward and backward scans (raw optimization_barrier has no
+    # differentiation rule and would kill jax.grad through the stack).
+    x, positions = utils.grad_safe_barrier((x, positions))
     if block_type in ("dense", "moe", "shared_attn"):
         if block_type == "shared_attn":
             xin = jnp.concatenate([x, emb0], axis=-1) @ \
@@ -416,7 +412,9 @@ def _embed_inputs(params, cfg: ArchConfig, batch: Dict) -> jnp.ndarray:
 
 def _run_segments(params, cfg: ArchConfig, side: str, segs, x, *, positions,
                   window, emb0, collect_cache: Optional[int] = None):
-    """Run one side's segment list.  Returns (x, aux_sum, caches)."""
+    """Run one side's segment list through the stack executor.
+
+    Returns (x, aux_sum, caches)."""
     aux_sum = dict(_EMPTY_AUX)
     caches = {}
     for i, (t, n) in enumerate(segs):
@@ -430,44 +428,19 @@ def _run_segments(params, cfg: ArchConfig, side: str, segs, x, *, positions,
                     lambda a: a[None], cache)
             continue
 
-        stacked = params[side][f"seg{i}"]
-        n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
-
         def body(carry, p, _t=t):
             y, aux, cache = block_forward(
                 cfg, _t, p, carry, positions=positions, window=window,
                 emb0=emb0, collect_cache=collect_cache)
             return y, (aux, cache)
 
-        if cfg.remat:
-            body = jax.checkpoint(body)
-
-        k = _inner_group(n, cfg.remat_group) if cfg.remat_group > 1 else 1
-        if cfg.remat and collect_cache is None and k > 1:
-            # two-level (sqrt-L) checkpointing: the backward stores only
-            # n/k group inputs + k layer inputs of the group in flight,
-            # instead of all n layer inputs (EXPERIMENTS.md SSPerf A8).
-            m = (n // k) * k
-            grouped = jax.tree_util.tree_map(
-                lambda a: a[:m].reshape((m // k, k) + a.shape[1:]), stacked)
-
-            def group(carry, pk):
-                y, (auxs, _) = jax.lax.scan(body, carry, pk)
-                return y, jax.tree_util.tree_map(
-                    lambda v: v.sum(), auxs)
-
-            x, auxs = jax.lax.scan(jax.checkpoint(group), x, grouped)
-            aux_sum = {kk: aux_sum[kk] + auxs[kk].sum() for kk in aux_sum}
-            if m < n:  # remainder layers: single-level remat
-                rest = jax.tree_util.tree_map(lambda a: a[m:], stacked)
-                x, (auxs_r, _) = jax.lax.scan(body, x, rest)
-                aux_sum = {kk: aux_sum[kk] + auxs_r[kk].sum()
-                           for kk in aux_sum}
-        else:
-            x, (auxs, seg_caches) = jax.lax.scan(body, x, stacked)
-            aux_sum = {kk: aux_sum[kk] + auxs[kk].sum() for kk in aux_sum}
-            if collect_cache is not None:
-                caches[f"seg{i}"] = seg_caches
+        x, seg_aux, seg_caches = stack_mod.run_stack(
+            body, x, params[side][f"seg{i}"], remat=cfg.remat,
+            remat_group=cfg.remat_group,
+            collect=collect_cache is not None)
+        aux_sum = {kk: aux_sum[kk] + seg_aux[kk] for kk in aux_sum}
+        if collect_cache is not None:
+            caches[f"seg{i}"] = seg_caches
     return x, aux_sum, caches
 
 
@@ -552,7 +525,8 @@ def decode_step(params, cfg: ArchConfig, caches: Dict, batch: Dict,
                                         window=window, emb0=emb0)
                 return y, c_new
 
-            x, seg_caches = jax.lax.scan(body, x, (stacked, cache))
+            x, seg_caches = stack_mod.run_decode_stack(body, x, stacked,
+                                                       cache)
             new_caches[side][f"seg{i}"] = seg_caches
         return x
 

@@ -4,6 +4,12 @@
 decode_32k / long_500k dry-run shapes: ONE new token against a KV/state
 cache of the configured length.  ``generate`` drives it autoregressively
 (greedy or temperature sampling) for the examples.
+
+Both the prefill (``transformer.forward`` with cache collection) and the
+per-token step (``transformer.decode_step``) execute the layer stack
+through the unified executor in ``repro.models.stack`` — the serve path
+shares one scan implementation with training, so cache layouts stay
+structurally identical to the training-time parameter stacking.
 """
 from __future__ import annotations
 

@@ -41,8 +41,18 @@ def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, *,
                     total_steps: int = 10000,
                     warmup_steps: int = 100,
                     grad_accum: int = 1,
-                    accum_dtype: str = "float32") -> Callable:
+                    accum_dtype: str = "float32",
+                    remat: Optional[bool] = None,
+                    remat_group: Optional[int] = None) -> Callable:
     """Build the jit-able train step.
+
+    ``remat`` / ``remat_group`` override the config's stack-executor
+    policy (``repro.models.stack``): ``remat=True`` checkpoints each
+    layer body, ``remat_group=k>1`` additionally enables two-level
+    (sqrt-L) checkpointing.  The backward pass through the stack relies
+    on ``repro.utils.grad_safe_barrier`` keeping the anti-hoisting
+    barrier differentiable — gradients flow across the split cut for
+    every config and both remat modes.
 
     ``grad_accum`` > 1 splits the global batch into microbatches processed
     by a lax.scan with gradient accumulation — the standard lever for
@@ -56,6 +66,12 @@ def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, *,
     accumulation of <=16 microbatches costs ~0.4% relative gradient error
     before the fp32 Adam update.
     """
+    if remat is not None or remat_group is not None:
+        cfg = dataclasses.replace(
+            cfg,
+            remat=cfg.remat if remat is None else remat,
+            remat_group=cfg.remat_group if remat_group is None
+            else remat_group)
     alpha = cfg.split.quant.commit_alpha
 
     def loss_fn(params, batch, rng):

@@ -1,3 +1,5 @@
+from repro.utils.barrier import grad_safe_barrier
 from repro.utils.tree import tree_bytes, tree_count, cast_tree, ste
 
-__all__ = ["tree_bytes", "tree_count", "cast_tree", "ste"]
+__all__ = ["grad_safe_barrier", "tree_bytes", "tree_count", "cast_tree",
+           "ste"]

@@ -1,0 +1,59 @@
+"""Gradient-safe optimization barrier.
+
+``jax.lax.optimization_barrier`` pins values in place so XLA cannot hoist
+layer-invariant computation (the attention-mask tables built from
+``positions``) out of the layer scan into layer-count-stacked buffers —
+gigabytes per device on the dry-run shapes.  But it has no differentiation
+rule (JAX 0.4.37 raises ``NotImplementedError`` the moment ``jax.grad``
+traces through the stack), which killed every train path in the repo.
+
+``grad_safe_barrier`` is a ``jax.custom_vjp`` wrapper that applies the
+barrier to the primal AND to the cotangent, so the same hoisting
+protection covers the backward scan: the transposed mask computation is
+anchored inside the backward loop body exactly like the forward one.
+
+Integer leaves (``positions``) get ``float0`` cotangents, which cannot be
+lowered through an ``opt-barrier`` op — they pass through untouched.
+"""
+from __future__ import annotations
+
+import jax
+from jax.dtypes import float0
+
+
+def _barrier_tree(tree):
+    """optimization_barrier over a pytree, skipping empty/float0 leaves."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        return tree
+    idx = [i for i, leaf in enumerate(leaves)
+           if getattr(leaf, "dtype", None) != float0]
+    if idx:
+        pinned = jax.lax.optimization_barrier(
+            tuple(leaves[i] for i in idx))
+        for i, v in zip(idx, pinned):
+            leaves[i] = v
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+@jax.custom_vjp
+def grad_safe_barrier(tree):
+    """Differentiable ``optimization_barrier`` over an arbitrary pytree.
+
+    Forward: identical to ``jax.lax.optimization_barrier(tree)``.
+    Backward: the cotangent tree is itself pinned with a barrier, so XLA
+    cannot hoist mask (or other layer-invariant) recomputation out of the
+    backward layer scan either.
+    """
+    return _barrier_tree(tree)
+
+
+def _fwd(tree):
+    return _barrier_tree(tree), None
+
+
+def _bwd(_res, ct):
+    return (_barrier_tree(ct),)
+
+
+grad_safe_barrier.defvjp(_fwd, _bwd)

@@ -1,0 +1,62 @@
+"""Hypothesis property tests for the compression methods.
+
+Kept separate from ``test_quantizers.py`` so a missing optional dependency
+skips only these tests instead of aborting tier-1 collection.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import QuantConfig, roundtrip  # noqa: E402
+from repro.core.packing import pack_bits, packed_size, unpack_bits  # noqa: E402
+
+
+def _x(shape=(4, 64, 32), scale=2.0, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+def _rmse(a, b):
+    return float(jnp.sqrt(jnp.mean((a - b) ** 2)))
+
+
+@settings(max_examples=50, deadline=None)
+@given(bits=st.sampled_from([1, 2, 3, 4, 8]),
+       n=st.integers(min_value=1, max_value=300),
+       seed=st.integers(min_value=0, max_value=2 ** 16))
+def test_pack_roundtrip_exact(bits, n, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 2 ** bits, size=(n,)).astype(np.uint8)
+    words = pack_bits(jnp.asarray(codes), bits)
+    assert words.shape[0] == packed_size(n, bits)
+    back = unpack_bits(words, bits, n)
+    np.testing.assert_array_equal(np.asarray(back), codes)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), bits=st.sampled_from([2, 4]),
+       method=st.sampled_from(["rdfsq", "nf"]))
+def test_double_quantize_idempotent(seed, bits, method):
+    """Re-quantizing a reconstruction reproduces (nearly) the same values."""
+    cfg = QuantConfig(method=method, bits=bits)
+    x = _x((2, 64), seed=seed)
+    y1, _ = roundtrip(cfg, x)
+    y2, _ = roundtrip(cfg, y1)
+    assert _rmse(y1, y2) < 0.25 * _rmse(x, y1) + 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_topk_preserves_largest(seed):
+    cfg = QuantConfig(method="topk", bits=2, rand_frac=0.0)
+    x = _x((2, 64), seed=seed)
+    x_hat, _ = roundtrip(cfg, x, jax.random.PRNGKey(seed))
+    flat = np.abs(np.asarray(x).reshape(2, -1))
+    kept = np.asarray(x_hat).reshape(2, -1) != 0
+    k = kept[0].sum()
+    for b in range(2):
+        top_idx = np.argsort(-flat[b])[:k]
+        assert kept[b][top_idx].all()
