@@ -1,0 +1,107 @@
+"""Attention kernel A/B: jnp reference vs Pallas, as printed numbers.
+
+Emits ``attention/<case>/<impl>`` rows (us_per_call) plus a
+``attention/<case>/speedup`` summary row per case, for:
+
+* ``flash_fwd``   — train/prefill forward (GQA, causal)
+* ``flash_grad``  — forward + backward through the custom VJP
+* ``flash_window``— sliding-window forward (block-skip path)
+* ``decode``      — single-token bf16-cache decode
+* ``decode_q8``   — single-token int8-cache decode (fused scales)
+
+On TPU the Pallas rows are the fused kernels; elsewhere they run in
+interpret mode (correctness A/B, not a fair timing — the row says so).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.attention_ops import _interpret
+from repro.models.layers.attention import (decode_attention,
+                                           decode_attention_q8,
+                                           flash_attention,
+                                           quantize_kv_token)
+
+IMPLS = ("jnp", "pallas")
+
+
+def _flash_args(s, h, kh, d, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, s, h, d))
+    k = jax.random.normal(ks[1], (1, s, kh, d))
+    v = jax.random.normal(ks[2], (1, s, kh, d))
+    return q, k, v
+
+
+def _decode_args(b, length, kh, g, d, seed=1):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, 1, kh * g, d))
+    k_cache = jax.random.normal(ks[1], (b, length, kh, d))
+    v_cache = jax.random.normal(ks[2], (b, length, kh, d))
+    kpos = jnp.broadcast_to(jnp.arange(length, dtype=jnp.int32),
+                            (b, length))
+    qpos = jnp.full((b,), length - 1, jnp.int32)
+    return q, k_cache, v_cache, kpos, qpos
+
+
+def _ab(case, fns, args, iters):
+    """Time both impls on identical args; emit per-impl + speedup rows."""
+    us = {}
+    for impl in IMPLS:
+        us[impl] = time_fn(fns[impl], *args, iters=iters)
+        emit(f"attention/{case}/{impl}", us[impl],
+             f"impl={impl};interpret={_interpret()}")
+    emit(f"attention/{case}/speedup", 0.0,
+         f"pallas_vs_jnp={us['jnp'] / max(us['pallas'], 1e-9):.3f}x")
+
+
+def run(fast: bool = False):
+    s = 256 if fast else 512
+    chunk = 128
+    iters = 3 if fast else 5
+    h, kh, d = 8, 2, 64
+    q, k, v = _flash_args(s, h, kh, d)
+
+    def flash(impl, window=None):
+        return jax.jit(functools.partial(
+            flash_attention, window=window, q_chunk=chunk, kv_chunk=chunk,
+            impl=impl))
+
+    _ab("flash_fwd", {i: flash(i) for i in IMPLS}, (q, k, v), iters)
+    _ab("flash_window", {i: flash(i, window=chunk) for i in IMPLS},
+        (q, k, v), iters)
+
+    def grad(impl):
+        fn = flash(impl)
+        return jax.jit(jax.grad(
+            lambda q, k, v: (fn(q, k, v) ** 2).sum(), argnums=(0, 1, 2)))
+
+    _ab("flash_grad", {i: grad(i) for i in IMPLS}, (q, k, v), iters)
+
+    length = 512 if fast else 2048
+    dq, kc, vc, kpos, qpos = _decode_args(4, length, kh, 4, d)
+
+    def dec(impl):
+        return jax.jit(functools.partial(decode_attention, impl=impl))
+
+    _ab("decode", {i: dec(i) for i in IMPLS}, (dq, kc, vc, kpos, qpos),
+        iters)
+
+    k_codes, k_scale = quantize_kv_token(kc)
+    v_codes, v_scale = quantize_kv_token(vc)
+
+    def dec8(impl):
+        return jax.jit(functools.partial(decode_attention_q8, impl=impl))
+
+    _ab("decode_q8", {i: dec8(i) for i in IMPLS},
+        (dq, k_codes, v_codes, k_scale, v_scale, kpos, qpos), iters)
+    return {}
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(fast=True)

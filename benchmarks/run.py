@@ -11,8 +11,9 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (fig4_attack, roofline, table1_entropy, table2_bits,
-                        table3_performance, table4_comm)
+from benchmarks import (attention_bench, fig4_attack, roofline,
+                        table1_entropy, table2_bits, table3_performance,
+                        table4_comm)
 
 SUITES = {
     "table1": lambda fast: table1_entropy.run(),
@@ -22,6 +23,7 @@ SUITES = {
     "table4": lambda fast: table4_comm.run(),
     "fig4": lambda fast: fig4_attack.run(n_steps=60 if fast else 250),
     "roofline": lambda fast: roofline.run(),
+    "attention": lambda fast: attention_bench.run(fast=fast),
 }
 
 

@@ -67,7 +67,10 @@ class ArchConfig:
     kv_cache_bits: int = 16
     # >1 enables two-level (sqrt-L) checkpointing with this group size:
     # ~2 sqrt(L) stored layer inputs instead of L, at ~1 extra forward of
-    # recompute + extra FSDP regathers (EXPERIMENTS.md SSPerf A8/C2)
+    # recompute + extra FSDP regathers (EXPERIMENTS.md SSPerf A8/C2).
+    # 0 = auto: segments whose stored layer inputs exceed the byte budget
+    # (REPRO_REMAT_BUDGET_BYTES) get k ~ sqrt(L) from
+    # repro.models.stack.auto_group_size; small stacks stay single-level.
     remat_group: int = 0
     # --- provenance ---
     source: str = ""

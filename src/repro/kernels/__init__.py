@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Custom-kernel layer: each hot spot ships as <name>_kernel.py (Pallas
+# TPU kernels) + a pure-jnp oracle (ref.py / attention_ref.py) + a
+# dispatch/layout wrapper (ops.py / attention_ops.py).  Current members:
+#   rdfsq_kernel / nf_kernel   — the paper's wire compressor (ops.py)
+#   flash_kernel               — flash attention fwd + bwd (attention_ops)
+#   decode_kernel              — fused bf16/int8 single-token decode
+# Kernels run compiled on TPU and interpret=True elsewhere; attention
+# backend selection is REPRO_ATTN_IMPL=pallas|jnp (see attention_ops).

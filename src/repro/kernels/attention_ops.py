@@ -1,0 +1,149 @@
+"""Backend dispatch for the attention kernels.
+
+Mirrors the ``kernels/ops.py`` idiom for the compressor: layout handling
+(transposes to the kernels' (B, H, S, D) form), ``interpret=True`` off
+TPU, and implementation selection.
+
+Selection order (``resolve_impl``):
+  1. explicit ``impl=`` keyword threaded through the public APIs in
+     ``models/layers/attention.py`` (used by parity tests / benchmarks);
+  2. the ``REPRO_ATTN_IMPL`` environment variable (``pallas`` | ``jnp``)
+     for zero-code A/B flips;
+  3. default: Pallas on TPU backends, the jnp reference elsewhere (the
+     interpreter is correct but slow, so CPU CI stays on jnp unless a
+     test opts in).
+
+``flash_pallas`` is the Pallas twin of ``attention_ref.flash_reference``
+— same operand contract (pre-scaled q, sentinel positions, chunk-aligned
+padding), same custom-VJP residuals (out, m, l), so ``flash_attention``
+can swap them 1:1 with zero call-site churn.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import attention_ref, decode_kernel, flash_kernel
+
+_VALID_IMPLS = ("pallas", "jnp")
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def compiled_shape_ok(block: int) -> bool:
+    """Gate for the COMPILED (real-TPU) kernels: sub-8 / unaligned
+    sequence blocks produce sublane tiles Mosaic handles poorly (or not
+    at all), so hostile shapes fall back to the jnp reference on TPU.
+    Interpret mode has no such constraint — CPU parity tests exercise
+    the kernels at any block size."""
+    return _interpret() or (block >= 8 and block % 8 == 0)
+
+
+def resolve_impl(impl: Optional[str] = None) -> str:
+    """Resolve the attention backend (see module docstring for order)."""
+    if impl is None:
+        impl = os.environ.get("REPRO_ATTN_IMPL", "").lower() or None
+    if impl is None:
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl not in _VALID_IMPLS:
+        raise ValueError(
+            f"unknown attention impl {impl!r}; expected one of "
+            f"{_VALID_IMPLS}")
+    return impl
+
+
+# ---------------------------------------------------------------------------
+# train / prefill flash attention
+# ---------------------------------------------------------------------------
+
+def _to_bhsd(x):
+    return x.transpose(0, 2, 1, 3)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def flash_pallas(q, k, v, qpos, kpos, window, chunk):
+    """Pallas flash attention on pre-scaled, chunk-padded operands.
+
+    Same contract as ``attention_ref.flash_reference``: q (B, Sq, H, D)
+    pre-multiplied by 1/sqrt(D), k/v (B, Skv, KH, D/Dv), qpos/kpos with
+    +/-2^30 sentinels.  Returns (B, Sq, H, Dv) in q.dtype.
+    """
+    out, _, _ = _flash_pallas_fwd_impl(q, k, v, qpos, kpos, window, chunk)
+    return out
+
+
+def _flash_pallas_fwd_impl(q, k, v, qpos, kpos, window, chunk):
+    outs, m, l = flash_kernel.forward(
+        _to_bhsd(q), _to_bhsd(k), _to_bhsd(v),
+        qpos.reshape(-1, 1), kpos.reshape(1, -1),
+        window=window, block=chunk, interpret=_interpret())
+    return _to_bhsd(outs).astype(q.dtype), m, l
+
+
+def _flash_pallas_vjp_fwd(q, k, v, qpos, kpos, window, chunk):
+    out, m, l = _flash_pallas_fwd_impl(q, k, v, qpos, kpos, window, chunk)
+    return out, (q, k, v, qpos, kpos, out, m, l)
+
+
+def _flash_pallas_vjp_bwd(window, chunk, res, gout):
+    q, k, v, qpos, kpos, out, m, l = res
+    # delta = rowsum(dO * O) — the only O(S) recomputation input the
+    # backward kernels need beyond (m, l).
+    di = jnp.einsum("bshd,bshd->bsh", gout.astype(jnp.float32),
+                    out.astype(jnp.float32)).transpose(0, 2, 1)[..., None]
+    qt, kt, vt = _to_bhsd(q), _to_bhsd(k), _to_bhsd(v)
+    got = _to_bhsd(gout)
+    qp2, kp2 = qpos.reshape(-1, 1), kpos.reshape(1, -1)
+    common = dict(window=window, block=chunk, interpret=_interpret())
+    dq = flash_kernel.backward_dq(qt, kt, vt, got, m, l, di, qp2, kp2,
+                                  **common)
+    dk, dvv = flash_kernel.backward_dkv(qt, kt, vt, got, m, l, di, qp2, kp2,
+                                        **common)
+    return (_to_bhsd(dq).astype(q.dtype), _to_bhsd(dk).astype(k.dtype),
+            _to_bhsd(dvv).astype(v.dtype), jnp.zeros_like(qpos),
+            jnp.zeros_like(kpos))
+
+
+flash_pallas.defvjp(_flash_pallas_vjp_fwd, _flash_pallas_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def decode_pallas(qf, k_cache, v_cache, kpos, qpos, *, window=None):
+    """Fused single-token decode.  qf (B, KH, G, D) pre-scaled; caches in
+    the native (B, L, KH, D/Dv) ring-buffer layout.  Returns
+    (B, KH, G, Dv) fp32."""
+    block = decode_kernel.pick_block(k_cache.shape[1])
+    if block is None or not compiled_shape_ok(block):
+        # no VMEM-safe (or, compiled, sublane-aligned) block divides
+        return attention_ref.decode_attention_ref(
+            qf, k_cache, v_cache, kpos, qpos, window=window)
+    return decode_kernel.decode(
+        qf, k_cache, v_cache, kpos, qpos.reshape(-1, 1).astype(jnp.int32),
+        window=window, block=block, interpret=_interpret())
+
+
+def decode_q8_pallas(qf, k_codes, v_codes, k_scale, v_scale, kpos, qpos, *,
+                     window=None):
+    """Fused int8-cache decode; folds the absmax scales into the dots
+    inside the kernel.  The (B, L, KH) fp16 scales are cast/transposed to
+    (B, KH, L) fp32 here — they are D-times smaller than the codes."""
+    block = decode_kernel.pick_block(k_codes.shape[1])
+    if block is None or not compiled_shape_ok(block):
+        return attention_ref.decode_attention_q8_ref(
+            qf, k_codes, v_codes, k_scale, v_scale, kpos, qpos,
+            window=window)
+    ks = k_scale.astype(jnp.float32).transpose(0, 2, 1)
+    vs = v_scale.astype(jnp.float32).transpose(0, 2, 1)
+    return decode_kernel.decode_q8(
+        qf, k_codes, v_codes, ks, vs, kpos,
+        qpos.reshape(-1, 1).astype(jnp.int32),
+        window=window, block=block, interpret=_interpret())

@@ -1,0 +1,210 @@
+"""Pallas TPU fused single-token decode attention kernels.
+
+The decode roofline is dominated by streaming the KV cache once per
+token; the jnp path additionally round-trips the (B, H, L) fp32 score and
+probability tensors through HBM — for a 32k cache those are the same
+order of magnitude as the cache itself — and the int8 path materializes
+a dequantized copy of every block.  These kernels stream the cache
+through VMEM once, keep the online-softmax state (m, l, acc) in scratch
+across the L sweep, and for the int8 cache fold the per-(token, head)
+absmax scales directly into the two dots, so no dequantized K/V tile
+ever exists outside VMEM.
+
+Grid: (B, KH, nL) with the cache-length axis innermost.  Caches keep the
+repo's native (B, L, KH, D) ring-buffer layout — blocks are strided
+(1, bL, 1, D) DMAs, squeezed to (bL, D) in VMEM.  Masking (empty slots,
+causality, sliding window) uses the runtime (kpos, qpos) vectors, and
+fully-masked blocks (outside the window / not yet written) are skipped
+with ``pl.when`` — the ring-buffer sweep degrades to O(window) work for
+long-context serving.
+
+Validated on CPU with interpret=True against attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+_TRANS_B = (((1,), (1,)), ((), ()))
+_PLAIN = (((1,), (0,)), ((), ()))
+
+
+# Largest cache-length block the kernels will accept: a (bL, D=256) fp32
+# K tile at 2048 rows is 2 MiB — comfortably inside VMEM with V, scales
+# and scratch.  Lengths with no divisor <= MAX_BLOCK (e.g. large primes)
+# are rejected by pick_block and fall back to the jnp reference.
+MAX_BLOCK = 2048
+
+
+def pick_block(length: int, target: int = 512) -> Optional[int]:
+    """VMEM-safe cache-length block: the largest divisor of ``length``
+    <= min(target, MAX_BLOCK), preferring sublane-aligned (multiple-of-8)
+    blocks.  Returns ``None`` when no reasonable block divides (e.g.
+    prime lengths beyond MAX_BLOCK) — callers fall back to the jnp
+    reference."""
+    cap = min(target, MAX_BLOCK, length)
+    for cand in range(cap - cap % 8, 7, -8):  # aligned, largest first
+        if length % cand == 0:
+            return cand
+    if length <= cap:
+        return length  # odd-but-small ring buffers: one block
+    for cand in range(cap, 7, -1):  # unaligned beats falling back
+        if length % cand == 0:
+            return cand
+    return None
+
+
+def _valid(kp, qp, window):
+    """(1, bL) mask: slot written, causal, in-window."""
+    v = jnp.logical_and(kp >= 0, kp <= qp)
+    if window is not None:
+        v = jnp.logical_and(v, qp - kp < window)
+    return v
+
+
+def _online_update(s, v_blk, m_s, l_s, acc_s, p_scale=None):
+    """One online-softmax step: s (G, bL) masked scores, v_blk (bL, Dv);
+    ``p_scale`` (1, bL) folds the int8 V absmax scales into p before the
+    dot (the l normalizer keeps the unscaled p, matching the reference
+    softmax-then-scale order)."""
+    m_prev = m_s[...]  # (G, 1)
+    m_next = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_next)
+    corr = jnp.exp(m_prev - m_next)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    m_s[...] = m_next
+    pv = p if p_scale is None else p * p_scale
+    pv = jax.lax.dot_general(pv.astype(v_blk.dtype), v_blk, _PLAIN,
+                             preferred_element_type=jnp.float32)
+    acc_s[...] = acc_s[...] * corr + pv
+
+
+def _decode_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_s, l_s, acc_s, *, window, nl):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, _NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    qp = qpos_ref[...]  # (1, 1) int32
+    kp = kpos_ref[...]  # (1, bL) int32
+    valid = _valid(kp, qp, window)
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        q = q_ref[0, 0]          # (G, D), pre-scaled
+        k = k_ref[0, :, 0, :]    # (bL, D)
+        s = jax.lax.dot_general(q, k, _TRANS_B,
+                                preferred_element_type=jnp.float32)
+        s = jnp.where(valid, s, _NEG_INF)
+        _online_update(s, v_ref[0, :, 0, :], m_s, l_s, acc_s)
+
+    @pl.when(j == nl - 1)
+    def _finalize():
+        o_ref[0, 0] = acc_s[...] / jnp.maximum(l_s[...], 1e-30)
+
+
+def decode(qf, k_cache, v_cache, kpos, qpos, *, window, block, interpret):
+    """qf: (B, KH, G, D) pre-scaled; caches (B, L, KH, D/Dv); kpos (B, L);
+    qpos (B, 1) int32.  Returns (B, KH, G, Dv) fp32."""
+    b, kh, g, d = qf.shape
+    length = k_cache.shape[1]
+    dv = v_cache.shape[-1]
+    nl = length // block
+    kernel = functools.partial(_decode_kernel, window=window, nl=nl)
+    cache_map = lambda b_, kh_, j: (b_, j, kh_, 0)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kh, nl),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b_, kh_, j: (b_, 0)),
+            pl.BlockSpec((1, block), lambda b_, kh_, j: (b_, j)),
+            pl.BlockSpec((1, 1, g, d), lambda b_, kh_, j: (b_, kh_, 0, 0)),
+            pl.BlockSpec((1, block, 1, d), cache_map),
+            pl.BlockSpec((1, block, 1, dv), cache_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dv),
+                               lambda b_, kh_, j: (b_, kh_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, dv), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qpos, kpos, qf, k_cache, v_cache)
+
+
+def _decode_q8_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, ks_ref,
+                      vs_ref, o_ref, m_s, l_s, acc_s, *, window, nl):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, _NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    qp = qpos_ref[...]
+    kp = kpos_ref[...]
+    valid = _valid(kp, qp, window)
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        q = q_ref[0, 0]                        # (G, D)
+        k = k_ref[0, :, 0, :].astype(q.dtype)  # (bL, D) int8 codes
+        s = jax.lax.dot_general(q, k, _TRANS_B,
+                                preferred_element_type=jnp.float32)
+        s = s * ks_ref[0]                      # fold K absmax scales
+        s = jnp.where(valid, s, _NEG_INF)
+        _online_update(s, v_ref[0, :, 0, :].astype(q.dtype), m_s, l_s,
+                       acc_s, p_scale=vs_ref[0])  # fold V absmax scales
+
+    @pl.when(j == nl - 1)
+    def _finalize():
+        o_ref[0, 0] = acc_s[...] / jnp.maximum(l_s[...], 1e-30)
+
+
+def decode_q8(qf, k_codes, v_codes, k_scale, v_scale, kpos, qpos, *,
+              window, block, interpret):
+    """Int8-cache decode.  qf (B, KH, G, D) pre-scaled; codes
+    (B, L, KH, D) int8; scales (B, KH, L) fp32 (pre-transposed by the
+    caller — they are D-times smaller than the codes).  Returns
+    (B, KH, G, D) fp32."""
+    b, kh, g, d = qf.shape
+    length = k_codes.shape[1]
+    nl = length // block
+    kernel = functools.partial(_decode_q8_kernel, window=window, nl=nl)
+    cache_map = lambda b_, kh_, j: (b_, j, kh_, 0)
+    scale_map = lambda b_, kh_, j: (b_, kh_, j)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kh, nl),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b_, kh_, j: (b_, 0)),
+            pl.BlockSpec((1, block), lambda b_, kh_, j: (b_, j)),
+            pl.BlockSpec((1, 1, g, d), lambda b_, kh_, j: (b_, kh_, 0, 0)),
+            pl.BlockSpec((1, block, 1, d), cache_map),
+            pl.BlockSpec((1, block, 1, d), cache_map),
+            pl.BlockSpec((1, 1, block), scale_map),
+            pl.BlockSpec((1, 1, block), scale_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda b_, kh_, j: (b_, kh_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qpos, kpos, qf, k_codes, v_codes, k_scale, v_scale)

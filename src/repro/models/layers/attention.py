@@ -1,32 +1,49 @@
-"""GQA attention with memory-safe chunked (flash-style) computation.
+"""GQA attention public API: projections, RoPE, KV caches, and dispatch.
 
-Pure-jnp online-softmax attention with a **custom VJP**: the forward saves
-only (out, row-max, row-sum); the backward recomputes per-(q-chunk,
-kv-chunk) probabilities instead of storing them — without this, the
-lax.scan backward would checkpoint an (Sq x Skv) probability tensor per
-layer and the train_4k shapes could never fit HBM (measured: 255 GiB/dev
--> 12 GiB/dev on llama3.2-3b; EXPERIMENTS.md §Perf).
+The actual attention math lives behind a two-backend dispatch
+(``repro.kernels.attention_ops``):
 
-Operands stay in model dtype (bf16); every dot accumulates in fp32 via
-``preferred_element_type``.  Chunk-level causal/window skipping avoids
-issuing fully-masked blocks (splash-attention style).
+* **pallas** — fused TPU flash-attention kernels
+  (``kernels/flash_kernel.py`` forward + backward,
+  ``kernels/decode_kernel.py`` single-token bf16/int8 decode); default on
+  TPU backends, interpret-mode elsewhere.
+* **jnp** — the chunked online-softmax reference with a custom VJP
+  (``kernels/attention_ref.py``); default off-TPU and the oracle for the
+  kernel parity tests.
+
+Select with the ``impl=`` keyword, the ``REPRO_ATTN_IMPL`` env var
+(``pallas`` | ``jnp``), or leave unset for the backend default.  Both
+backends share the operand contract: operands stay in model dtype (bf16),
+every dot accumulates in fp32, the backward recomputes per-block
+probabilities from the saved (row-max, row-sum) so no (Sq x Skv) tensor
+is ever materialized, and masking uses RUNTIME position vectors (see
+``attention_ref._block_mask`` for why trace-time iota is forbidden).
 
 Supports: causal masking, sliding windows (the sub-quadratic variant used
 for long_500k on full-attention architectures), GQA head grouping,
-Dv != Dk (MLA), decode against ring-buffer KV caches.
+Dv != Dk (MLA), decode against ring-buffer KV caches (bf16 and
+int8-quantized with fused scales).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import attention_ops
+from repro.kernels.attention_ref import (_FAR, _NEG_INF,
+                                         decode_attention_q8_ref,
+                                         decode_attention_ref,
+                                         flash_reference)
 from repro.models.layers.rope import apply_rope, rope_angles
 from repro.sharding import ctx as shard_ctx
 
-_NEG_INF = -1e30
+__all__ = [
+    "init_attention_params", "flash_attention", "decode_attention",
+    "decode_attention_q8", "gqa_forward", "gqa_decode", "init_kv_cache",
+    "quantize_kv_token", "_NEG_INF",
+]
 
 
 def init_attention_params(key, d_model: int, n_heads: int, n_kv_heads: int,
@@ -46,207 +63,19 @@ def init_attention_params(key, d_model: int, n_heads: int, n_kv_heads: int,
     )
 
 
-_FAR = jnp.int32(2 ** 30)
-
-
-def _block_mask(qpos, kpos, window):
-    """(cq, ckv) causal/window mask from RUNTIME position vectors.
-
-    Positions must be runtime data (not trace-time iota): if XLA can
-    constant-fold the masks it widens them into (nq x nkv x ...) stacked
-    buffers inside the scan loops — measured 26 GiB/device on train_4k
-    before this fix (EXPERIMENTS.md SSPerf).
-    """
-    m = kpos[None, :] <= qpos[:, None]
-    if window is not None:
-        m &= qpos[:, None] - kpos[None, :] < window
-    return m
-
-
-# ---------------------------------------------------------------------------
-# forward implementation (shared by primal and VJP fwd)
-# ---------------------------------------------------------------------------
-
-def _flash_fwd_impl(qs, k, v, qpos, kpos, *, window, chunk):
-    """qs is the pre-scaled query; qpos/kpos are runtime position vectors
-    (padded with +/-2^30 sentinels).  Returns (out fp32, m, l) chunked:
-    out (nq, B, KH, G, cq, Dv); m, l (nq, B, KH, G, cq)."""
-    b, sq, h, d = qs.shape
-    skv, kh = k.shape[1], k.shape[2]
-    dv = v.shape[-1]
-    g = h // kh
-    nq = sq // chunk
-    nkv = skv // chunk
-
-    qc_all = qs.reshape(b, nq, chunk, kh, g, d).transpose(1, 0, 3, 4, 2, 5)
-    ks = k.reshape(b, nkv, chunk, kh, d).transpose(1, 0, 2, 3, 4)
-    vs = v.reshape(b, nkv, chunk, kh, dv).transpose(1, 0, 2, 3, 4)
-    qp_all = qpos.reshape(nq, chunk)
-    kp_all = kpos.reshape(nkv, chunk)
-
-    def q_body(qc, qp):  # qc: (B, KH, G, cq, D); qp: (cq,)
-        def kv_body(carry, inp):
-            m_run, l_run, acc = carry
-            kc, vc, kp = inp
-
-            def compute(c):
-                m_run, l_run, acc = c
-                s = jnp.einsum("bkgqd,bskd->bkgqs", qc, kc,
-                               preferred_element_type=jnp.float32)
-                mask = _block_mask(qp, kp, window)
-                s = jnp.where(mask[None, None, None], s, _NEG_INF)
-                m_new = jnp.maximum(m_run, s.max(axis=-1))
-                p = jnp.exp(s - m_new[..., None])
-                corr = jnp.exp(m_run - m_new)
-                l_new = l_run * corr + p.sum(axis=-1)
-                pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vc.dtype), vc,
-                                preferred_element_type=jnp.float32)
-                return m_new, l_new, acc * corr[..., None] + pv
-
-            visible = kp.min() <= qp.max()
-            if window is not None:
-                visible &= kp.max() > qp.min() - window
-            carry = jax.lax.cond(visible, compute, lambda c: c,
-                                 (m_run, l_run, acc))
-            return carry, None
-
-        m0 = jnp.full((b, kh, g, chunk), _NEG_INF, jnp.float32)
-        l0 = jnp.zeros((b, kh, g, chunk), jnp.float32)
-        a0 = jnp.zeros((b, kh, g, chunk, dv), jnp.float32)
-        (m_f, l_f, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0),
-                                          (ks, vs, kp_all))
-        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
-        return out, m_f, l_f
-
-    def q_scan(_, inp):
-        qc, qp = inp
-        return 0, q_body(qc, qp)
-
-    _, (outs, ms, ls) = jax.lax.scan(q_scan, 0, (qc_all, qp_all))
-    return outs, ms, ls
-
-
-def _unchunk_out(outs, b, sq, h, dv, dtype):
-    nq = outs.shape[0]
-    q_chunk = outs.shape[4]
-    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * q_chunk, h, dv)
-    return out[:, :sq].astype(dtype)
-
-
-# ---------------------------------------------------------------------------
-# custom-VJP flash attention
-# ---------------------------------------------------------------------------
-
-@partial(jax.custom_vjp, nondiff_argnums=(5, 6))
-def _flash(q, k, v, qpos, kpos, window, chunk):
-    outs, _, _ = _flash_fwd_impl(q, k, v, qpos, kpos, window=window,
-                                 chunk=chunk)
-    b, sq, h, _ = q.shape
-    return _unchunk_out(outs, b, sq, h, v.shape[-1], q.dtype)
-
-
-def _flash_vjp_fwd(q, k, v, qpos, kpos, window, chunk):
-    outs, ms, ls = _flash_fwd_impl(q, k, v, qpos, kpos, window=window,
-                                   chunk=chunk)
-    b, sq, h, _ = q.shape
-    out = _unchunk_out(outs, b, sq, h, v.shape[-1], q.dtype)
-    return out, (q, k, v, qpos, kpos, out, ms, ls)
-
-
-def _flash_vjp_bwd(window, chunk, res, gout):
-    """Flash backward: recompute per-block probabilities from saved (m, l);
-    never stores an (Sq x Skv) tensor."""
-    q, k, v, qpos, kpos, out, ms, ls = res
-    b, sq, h, d = q.shape
-    skv, kh = k.shape[1], k.shape[2]
-    dv = v.shape[-1]
-    g = h // kh
-    nq = sq // chunk
-    nkv = skv // chunk
-
-    delta_all = jnp.einsum("bshd,bshd->bsh", gout.astype(jnp.float32),
-                           out.astype(jnp.float32))
-    delta_all = delta_all.reshape(b, nq, chunk, kh, g).transpose(
-        1, 0, 3, 4, 2)
-    go = gout.reshape(b, nq, chunk, kh, g, dv).transpose(1, 0, 3, 4, 2, 5)
-    qc_all = q.reshape(b, nq, chunk, kh, g, d).transpose(1, 0, 3, 4, 2, 5)
-    ks = k.reshape(b, nkv, chunk, kh, d).transpose(1, 0, 2, 3, 4)
-    vs = v.reshape(b, nkv, chunk, kh, dv).transpose(1, 0, 2, 3, 4)
-    qp_all = qpos.reshape(nq, chunk)
-    kp_all = kpos.reshape(nkv, chunk)
-
-    def q_body(carry, inp):
-        dk_acc, dv_acc, kj0 = carry  # (nkv, B, ckv, KH, d/dv) fp32
-        qc, qp, m_q, l_q, go_q, delta_q = inp
-        linv = 1.0 / jnp.maximum(l_q, 1e-30)
-
-        def kv_body(c, inp2):
-            kj, dq_c, dk_acc, dv_acc = c
-            kc, vc, kp = inp2
-
-            def compute(c):
-                dq_c, dk_acc, dv_acc = c
-                s = jnp.einsum("bkgqd,bskd->bkgqs", qc, kc,
-                               preferred_element_type=jnp.float32)
-                mask = _block_mask(qp, kp, window)
-                s = jnp.where(mask[None, None, None], s, _NEG_INF)
-                p = jnp.exp(s - m_q[..., None]) * linv[..., None]
-                dv_blk = jnp.einsum("bkgqs,bkgqd->bskd",
-                                    p.astype(go_q.dtype), go_q,
-                                    preferred_element_type=jnp.float32)
-                dp = jnp.einsum("bkgqd,bskd->bkgqs", go_q, vc,
-                                preferred_element_type=jnp.float32)
-                ds = p * (dp - delta_q[..., None])
-                dq_blk = jnp.einsum("bkgqs,bskd->bkgqd",
-                                    ds.astype(kc.dtype), kc,
-                                    preferred_element_type=jnp.float32)
-                dk_blk = jnp.einsum("bkgqs,bkgqd->bskd",
-                                    ds.astype(qc.dtype), qc,
-                                    preferred_element_type=jnp.float32)
-                return (dq_c + dq_blk,
-                        dk_acc.at[kj].add(dk_blk),
-                        dv_acc.at[kj].add(dv_blk))
-
-            visible = kp.min() <= qp.max()
-            if window is not None:
-                visible &= kp.max() > qp.min() - window
-            dq_c, dk_acc, dv_acc = jax.lax.cond(
-                visible, compute, lambda c: c, (dq_c, dk_acc, dv_acc))
-            return (kj + 1, dq_c, dk_acc, dv_acc), None
-
-        dq0 = jnp.zeros((b, kh, g, chunk, d), jnp.float32)
-        (_, dq_c, dk_acc, dv_acc), _ = jax.lax.scan(
-            kv_body, (jnp.zeros((), jnp.int32), dq0, dk_acc, dv_acc),
-            (ks, vs, kp_all))
-        return (dk_acc, dv_acc, kj0), dq_c
-
-    dk0 = jnp.zeros((nkv, b, chunk, kh, d), jnp.float32)
-    dv0 = jnp.zeros((nkv, b, chunk, kh, dv), jnp.float32)
-    (dk_acc, dv_acc, _), dqs = jax.lax.scan(
-        q_body, (dk0, dv0, 0), (qc_all, qp_all, ms, ls, go, delta_all))
-
-    dq = dqs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, d).astype(q.dtype)
-    dk = dk_acc.transpose(1, 0, 2, 3, 4).reshape(b, skv, kh, d).astype(
-        k.dtype)
-    dvv = dv_acc.transpose(1, 0, 2, 3, 4).reshape(b, skv, kh, dv).astype(
-        v.dtype)
-    return dq, dk, dvv, jnp.zeros_like(qpos), jnp.zeros_like(kpos)
-
-
-_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
-
-
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     positions: Optional[jnp.ndarray] = None,
                     causal: bool = True, window: Optional[int] = None,
                     q_offset: int = 0, kv_valid_len: Optional[int] = None,
-                    q_chunk: int = 512, kv_chunk: int = 512) -> jnp.ndarray:
+                    q_chunk: int = 512, kv_chunk: int = 512,
+                    impl: Optional[str] = None) -> jnp.ndarray:
     """Online-softmax causal attention.
 
     q: (B, Sq, H, D); k: (B, Skv, KH, D); v: (B, Skv, KH, Dv) with
     H % KH == 0 (Dv may differ from D, as in MLA).
     ``positions``: (Sq,) runtime token positions (defaults to arange —
     pass the model's position-id input so XLA cannot constant-fold masks).
+    ``impl``: attention backend override (``pallas`` | ``jnp``).
     Returns (B, Sq, H, Dv) in q.dtype.
     """
     assert causal and q_offset == 0, "flash path is causal/offset-0 only"
@@ -271,38 +100,59 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     kpos = jnp.full((skv + pad_kv,), _FAR, jnp.int32)
     kpos = kpos.at[:min(sq, skv)].set(positions[:min(sq, skv)])
     kpos = jnp.where(jnp.arange(kpos.shape[0]) < kv_valid_len, kpos, _FAR)
-    out = _flash(qs, kp_arr, vp, qpos, kpos, window, chunk)
+    if attention_ops.resolve_impl(impl) == "pallas" \
+            and attention_ops.compiled_shape_ok(chunk):
+        out = attention_ops.flash_pallas(qs, kp_arr, vp, qpos, kpos, window,
+                                         chunk)
+    else:
+        out = flash_reference(qs, kp_arr, vp, qpos, kpos, window, chunk)
     # the q * scale pre-multiplication is in-graph, so its chain rule is
     # handled by the surrounding autodiff.
     return out[:, :sq]
 
 
+def _grouped_query(q: jnp.ndarray, kh: int) -> jnp.ndarray:
+    """(B, 1, H, D) -> pre-scaled, shard-constrained (B, KH, G, D)."""
+    b, _, h, d = q.shape
+    qf = q.reshape(b, kh, h // kh, d) * jnp.asarray(d ** -0.5, q.dtype)
+    return shard_ctx.constrain(qf, "decode_q")  # SSPerf B2
+
+
 def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
                      v_cache: jnp.ndarray, kpos: jnp.ndarray,
                      qpos: jnp.ndarray, *,
-                     window: Optional[int] = None) -> jnp.ndarray:
+                     window: Optional[int] = None,
+                     impl: Optional[str] = None) -> jnp.ndarray:
     """Single-token attention against a (ring-buffer) KV cache.
 
     q: (B, 1, H, D); caches: (B, L, KH, D/Dv); kpos: (B, L) absolute
     position of each cache slot (-1 for empty); qpos: (B,).
     """
-    b, _, h, d = q.shape
-    kh = k_cache.shape[2]
-    g = h // kh
-    scale = d ** -0.5
-    qf = q.reshape(b, kh, g, d) * jnp.asarray(scale, q.dtype)
-    qf = shard_ctx.constrain(qf, "decode_q")  # SSPerf B2
-    s = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache,
-                   preferred_element_type=jnp.float32)
-    valid = kpos >= 0
-    valid &= kpos <= qpos[:, None]
-    if window is not None:
-        valid &= qpos[:, None] - kpos < window
-    s = jnp.where(valid[:, None, None, :], s, _NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
-                     preferred_element_type=jnp.float32)
+    b, _, h, _ = q.shape
+    qf = _grouped_query(q, k_cache.shape[2])
+    if attention_ops.resolve_impl(impl) == "pallas":
+        out = attention_ops.decode_pallas(qf, k_cache, v_cache, kpos, qpos,
+                                          window=window)
+    else:
+        out = decode_attention_ref(qf, k_cache, v_cache, kpos, qpos,
+                                   window=window)
     return out.reshape(b, 1, h, v_cache.shape[-1]).astype(q.dtype)
+
+
+def decode_attention_q8(q, k_codes, v_codes, k_scale, v_scale, kpos, qpos, *,
+                        window=None, impl: Optional[str] = None):
+    """Single-token attention against an int8 cache; scales fold into the
+    dots: s = (q . codes) * k_scale;  out = (p * v_scale) . codes."""
+    b, _, h, d = q.shape
+    qf = _grouped_query(q, k_codes.shape[2])
+    if attention_ops.resolve_impl(impl) == "pallas":
+        out = attention_ops.decode_q8_pallas(qf, k_codes, v_codes, k_scale,
+                                             v_scale, kpos, qpos,
+                                             window=window)
+    else:
+        out = decode_attention_q8_ref(qf, k_codes, v_codes, k_scale, v_scale,
+                                      kpos, qpos, window=window)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
 def gqa_forward(params: Dict, x: jnp.ndarray, *, n_heads: int,
@@ -396,28 +246,3 @@ def quantize_kv_token(x: jnp.ndarray):
     codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
                      -127, 127).astype(jnp.int8)
     return codes, scale.astype(jnp.float16)
-
-
-def decode_attention_q8(q, k_codes, v_codes, k_scale, v_scale, kpos, qpos, *,
-                        window=None):
-    """Single-token attention against an int8 cache; scales fold into the
-    dots: s = (q . codes) * k_scale;  out = (p * v_scale) . codes."""
-    b, _, h, d = q.shape
-    kh = k_codes.shape[2]
-    g = h // kh
-    scale = d ** -0.5
-    qf = q.reshape(b, kh, g, d) * jnp.asarray(scale, q.dtype)
-    qf = shard_ctx.constrain(qf, "decode_q")
-    s = jnp.einsum("bkgd,bskd->bkgs", qf, k_codes.astype(q.dtype),
-                   preferred_element_type=jnp.float32)
-    s = s * k_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
-    valid = (kpos >= 0) & (kpos <= qpos[:, None])
-    if window is not None:
-        valid &= qpos[:, None] - kpos < window
-    s = jnp.where(valid[:, None, None, :], s, _NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    pv = p * v_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
-    out = jnp.einsum("bkgs,bskd->bkgd", pv.astype(q.dtype),
-                     v_codes.astype(q.dtype),
-                     preferred_element_type=jnp.float32)
-    return out.reshape(b, 1, h, d).astype(q.dtype)

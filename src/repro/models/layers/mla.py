@@ -65,8 +65,12 @@ def mla_forward(params: Dict, x: jnp.ndarray, *, n_heads: int,
                 qk_nope_dim: int, qk_rope_dim: int, v_head_dim: int,
                 kv_lora_rank: int, rope_theta: float,
                 positions: jnp.ndarray, window: Optional[int] = None,
-                return_kv: bool = False):
-    """Train / prefill with materialized K/V."""
+                return_kv: bool = False, impl: Optional[str] = None):
+    """Train / prefill with materialized K/V.
+
+    ``impl`` selects the attention backend (pallas | jnp); the Dv != Dk
+    head shape exercises the kernels' MLA path.
+    """
     b, s, _ = x.shape
     q_nope, q_rope = _project_q(params, x, n_heads, qk_nope_dim, qk_rope_dim)
 
@@ -86,7 +90,7 @@ def mla_forward(params: Dict, x: jnp.ndarray, *, n_heads: int,
         axis=-1)
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
     out = flash_attention(q, k, v, positions=positions, causal=True,
-                          window=window)
+                          window=window, impl=impl)
     y = out.reshape(b, s, n_heads * v_head_dim) @ params["wo"].astype(x.dtype)
     if return_kv:
         return y, (c_kv, k_rope[:, :, 0, :])  # latent cache

@@ -34,12 +34,43 @@ every train step.
 """
 from __future__ import annotations
 
+import math
+import os
 from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 Body = Callable[[Any, Any], Tuple[Any, Tuple[Any, Any]]]
+
+# Per-device byte budget for single-level-remat stored layer inputs before
+# the auto-tuner switches a segment to two-level (sqrt-L) grouping.
+# Shapes at trace time are pre-GSPMD (global), so the default is sized for
+# global activations on a production mesh; override per deployment with
+# REPRO_REMAT_BUDGET_BYTES.
+_DEFAULT_REMAT_BUDGET = 4 * 1024 ** 3
+
+
+def auto_group_size(n: int, layer_bytes: int,
+                    budget: Optional[int] = None) -> int:
+    """Bytes-aware two-level-remat group size for an ``n``-layer segment.
+
+    Single-level remat stores one carry per layer: ``n * layer_bytes``.
+    When that fits ``budget`` (REPRO_REMAT_BUDGET_BYTES, default 4 GiB),
+    grouping only costs extra recompute + FSDP regathers, so stay
+    single-level (returns 1).  Beyond it, ``k = round(sqrt(n))`` minimizes
+    the ``n/k`` group inputs + ``k`` in-flight layer inputs the two-level
+    schedule stores — ~2*sqrt(n) carries instead of n (EXPERIMENTS.md
+    SSPerf A8).  Explicit ``cfg.remat_group`` always wins over this.
+    """
+    if n < 4:
+        return 1
+    if budget is None:
+        budget = int(os.environ.get("REPRO_REMAT_BUDGET_BYTES",
+                                    _DEFAULT_REMAT_BUDGET))
+    if n * layer_bytes <= budget:
+        return 1
+    return max(2, round(math.sqrt(n)))
 
 
 def group_size(n: int, target: int = 8) -> int:

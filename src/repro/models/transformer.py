@@ -434,9 +434,16 @@ def _run_segments(params, cfg: ArchConfig, side: str, segs, x, *, positions,
                 emb0=emb0, collect_cache=collect_cache)
             return y, (aux, cache)
 
+        stacked = params[side][f"seg{i}"]
+        remat_group = cfg.remat_group
+        if cfg.remat and remat_group == 0:
+            # unset -> bytes-aware auto-tune from the carry entering the
+            # segment (the stored layer input of the remat schedule)
+            remat_group = stack_mod.auto_group_size(
+                stack_mod.stack_len(stacked), x.size * x.dtype.itemsize)
         x, seg_aux, seg_caches = stack_mod.run_stack(
-            body, x, params[side][f"seg{i}"], remat=cfg.remat,
-            remat_group=cfg.remat_group,
+            body, x, stacked, remat=cfg.remat,
+            remat_group=remat_group,
             collect=collect_cache is not None)
         aux_sum = {kk: aux_sum[kk] + seg_aux[kk] for kk in aux_sum}
         if collect_cache is not None:

@@ -13,12 +13,14 @@ structurally identical to the training-time parameter stacking.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.kernels import attention_ops
 from repro.models import transformer as tf
 
 
@@ -38,6 +40,22 @@ def make_serve_step(cfg: ArchConfig, *,
         return logits, new_caches
 
     return serve_step
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_serve_step(cfg: ArchConfig, window: Optional[int],
+                         attn_impl: str) -> Callable:
+    """One jitted serve step per (cfg, window, attention backend).
+
+    ``ArchConfig`` is a frozen (hashable) dataclass, so repeated
+    ``generate`` calls — and multiple concurrent generations on the same
+    model — reuse a single compiled step instead of re-jitting per call.
+    The resolved attention backend is part of the key: REPRO_ATTN_IMPL is
+    read at trace time, so flipping it between ``generate`` calls must
+    miss the cache rather than silently reuse the other backend's step.
+    """
+    del attn_impl  # cache key only; the traced code reads the env var
+    return jax.jit(make_serve_step(cfg, window=window))
 
 
 def prefill(params, cfg: ArchConfig, batch: Dict, cache_len: int, *,
@@ -68,12 +86,13 @@ def generate(params, cfg: ArchConfig, batch: Dict, *, n_new: int,
         prompt_len = batch["tokens"].shape[1]
         bsz = batch["tokens"].shape[0]
 
-    serve_step = jax.jit(make_serve_step(cfg, window=window))
+    serve_step = _compiled_serve_step(cfg, window,
+                                      attention_ops.resolve_impl(None))
 
     def pick(logits, key):
+        # (B, V), or (B, K, V) for audio — argmax/categorical over the
+        # trailing vocab axis handles both (per-codebook picks for audio).
         last = logits[:, -1]
-        if cfg.modality == "audio":  # (B, K, V)
-            last = logits[:, -1]
         if temperature <= 0.0:
             return jnp.argmax(last, axis=-1)
         return jax.random.categorical(key, last / temperature, axis=-1)

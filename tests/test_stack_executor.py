@@ -140,6 +140,35 @@ def test_group_size_remainders():
     assert stack.group_size(3, 8) == 1
 
 
+def test_auto_group_size_bytes_aware():
+    mib = 2 ** 20
+    # fits the budget -> stay single-level
+    assert stack.auto_group_size(64, mib, budget=64 * mib) == 1
+    # over budget -> k ~ sqrt(n)
+    assert stack.auto_group_size(64, 2 * mib, budget=64 * mib) == 8
+    assert stack.auto_group_size(29, mib, budget=mib) == 5   # round(sqrt)
+    # tiny stacks never group, whatever the bytes
+    assert stack.auto_group_size(3, 2 ** 40, budget=1) == 1
+    # env default budget is used when budget is omitted
+    assert stack.auto_group_size(8, 1) == 1
+
+
+def test_auto_remat_group_engages_and_preserves_numerics(monkeypatch):
+    """With a zero byte budget every remat segment auto-groups; forward
+    and grads must match the ungrouped model exactly."""
+    cfg_plain = _cfg(n_layers=8, remat=False)
+    params = tf.init_params(KEY, cfg_plain)
+    batch = _batch(cfg_plain)
+    l0, g0 = jax.value_and_grad(_loss_fn(cfg_plain))(params, batch)
+    monkeypatch.setenv("REPRO_REMAT_BUDGET_BYTES", "0")
+    cfg_auto = _cfg(n_layers=8, remat=True, remat_group=0)
+    l1, g1 = jax.value_and_grad(_loss_fn(cfg_auto))(params, batch)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(g0),
+                    jax.tree_util.tree_leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # (b) plain vs sqrt-L remat on the real model
 # ---------------------------------------------------------------------------
