@@ -1,0 +1,40 @@
+"""Wire codec A/B: jnp oracle vs fused Pallas quantize+pack kernels.
+
+The compressor runs serially on the split-learning wire (every microbatch
+crosses it before the collective-permute), so encode+decode latency adds
+directly to the communication-critical path.  One row per
+(method, bits, impl) on a decode-heavy boundary-activation shape; on CPU
+the pallas rows run the interpreter (correct but slow — the comparison is
+meaningful on TPU, the parity is checked everywhere).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import quantizers as Q
+from repro.core.quantizers import QuantConfig
+
+SHAPE = (32, 1024, 512)  # (micro_batch, seq, d_model) boundary slab
+
+
+def run(fast: bool = False):
+    shape = (8, 256, 256) if fast else SHAPE
+    x = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
+    impls = ("jnp",) if (fast and jax.default_backend() != "tpu") \
+        else ("jnp", "pallas")
+    for method in ("rdfsq", "nf"):
+        for bits in (2, 4):
+            cfg = QuantConfig(method=method, bits=bits)
+            for impl in impls:
+                enc = jax.jit(lambda v, c=cfg, i=impl: Q.encode(
+                    c, v, impl=i).data)
+                t_enc = time_fn(enc, x, iters=3, warmup=1)
+                payload = Q.encode(cfg, x, impl=impl)
+                dec = jax.jit(lambda p, c=cfg: Q.decode(c, p))
+                t_dec = time_fn(dec, payload, iters=3, warmup=1)
+                emit(f"quant/{method}{bits}_encode_{impl}", t_enc,
+                     f"wire={payload.wire_bytes()}B")
+                emit(f"quant/{method}{bits}_decode_{impl}", t_dec,
+                     f"impl={payload.meta['impl']}")

@@ -11,7 +11,7 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (attention_bench, fig4_attack, roofline,
+from benchmarks import (attention_bench, fig4_attack, quant_bench, roofline,
                         table1_entropy, table2_bits, table3_performance,
                         table4_comm)
 
@@ -24,6 +24,7 @@ SUITES = {
     "fig4": lambda fast: fig4_attack.run(n_steps=60 if fast else 250),
     "roofline": lambda fast: roofline.run(),
     "attention": lambda fast: attention_bench.run(fast=fast),
+    "quant": lambda fast: quant_bench.run(fast=fast),
 }
 
 

@@ -19,3 +19,10 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # 'missing' row and succeeds when results/dryrun is empty).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m benchmarks.run --fast --only roofline
+
+# Split-pipeline smoke: N=4-stage dry-run on 8 fake devices (asserts the
+# static CommPayload wire bytes against the HLO collective-permute
+# measurement) + a short reduced-config training run (asserts the loss
+# decreases across the quantized wire).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m repro.launch.split_pipeline --smoke

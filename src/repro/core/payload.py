@@ -43,12 +43,24 @@ class CommPayload:
     )
 
     def wire_bytes(self) -> int:
-        """Total bytes on the wire for this payload."""
-        total = self.data.size * self.data.dtype.itemsize
+        """Total bytes on the wire for this payload.
+
+        Computed from shape/dtype (not ``.size``) so it also works on a
+        ``jax.eval_shape`` result — payload shapes are static, which is
+        what makes the split pipeline's per-tick wire bytes a
+        compile-time constant.
+        """
+        def nbytes(a) -> int:
+            n = 1
+            for s in a.shape:
+                n *= s
+            return n * jnp.dtype(a.dtype).itemsize
+
+        total = nbytes(self.data)
         if self.scales is not None:
-            total += self.scales.size * self.scales.dtype.itemsize
+            total += nbytes(self.scales)
         for v in self.aux.values():
-            total += v.size * v.dtype.itemsize
+            total += nbytes(v)
         return int(total)
 
     def arrays(self) -> Tuple[jnp.ndarray, ...]:

@@ -1,8 +1,11 @@
 """Compression methods for split-learning activation transmission."""
 from repro.core.quantizers.base import (QuantConfig, decode, encode, methods,
-                                        roundtrip)
+                                        resolve_impl, roundtrip)
 
-# registration side-effects
+# registration side-effects: jnp oracles first, then the Pallas backends
+# (which import repro.kernels and may fall back to the jnp encoders)
 from repro.core.quantizers import fsq, identity, nf, rdfsq, topk  # noqa: F401, E402
+from repro.core.quantizers import pallas_codecs  # noqa: F401, E402
 
-__all__ = ["QuantConfig", "encode", "decode", "roundtrip", "methods"]
+__all__ = ["QuantConfig", "encode", "decode", "roundtrip", "methods",
+           "resolve_impl"]

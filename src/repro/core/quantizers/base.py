@@ -18,6 +18,22 @@ functions, dispatched on ``QuantConfig.method``:
 
 All three agree numerically: ``decode(cfg, encode(cfg, x, rng)) ==
 roundtrip(cfg, x, rng)[0]`` (tested property).
+
+Backend dispatch (mirrors ``kernels/attention_ops.py``): ``encode`` may
+run either the pure-jnp registration (the oracle) or a fused Pallas
+quantize+pack kernel registered via :func:`register_backend`.  Selection
+order:
+
+  1. explicit ``impl=`` keyword (parity tests / benchmarks);
+  2. the ``REPRO_QUANT_IMPL`` environment variable (``pallas`` | ``jnp``);
+  3. default: Pallas on TPU backends, jnp elsewhere (the interpreter is
+     exact but slow, so CPU CI stays on jnp unless a test opts in).
+
+``decode`` dispatches on the payload's own ``meta["impl"]`` tag — a
+payload always decodes with the backend that produced it, so the two
+sides of the wire never disagree about the packed layout.  ``roundtrip``
+is always the jnp/STE path (it must be differentiable; the kernels are
+encode/decode only).
 """
 from __future__ import annotations
 
@@ -28,6 +44,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.payload import CommPayload
+from repro.utils.dispatch import resolve_backend_impl
+
+_VALID_IMPLS = ("pallas", "jnp")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +75,9 @@ class QuantConfig:
 _ENCODERS: Dict[str, Callable] = {}
 _DECODERS: Dict[str, Callable] = {}
 _ROUNDTRIPS: Dict[str, Callable] = {}
+# (method, impl) -> fn for non-default backends (currently impl='pallas')
+_BACKEND_ENCODERS: Dict[Tuple[str, str], Callable] = {}
+_BACKEND_DECODERS: Dict[Tuple[str, str], Callable] = {}
 
 
 def register(method: str, encode_fn, decode_fn, roundtrip_fn) -> None:
@@ -64,12 +86,40 @@ def register(method: str, encode_fn, decode_fn, roundtrip_fn) -> None:
     _ROUNDTRIPS[method] = roundtrip_fn
 
 
+def register_backend(method: str, impl: str, encode_fn, decode_fn) -> None:
+    """Register an alternative (fused-kernel) encode/decode pair.
+
+    The backend must preserve the wire semantics: ``decode(encode(x))``
+    reconstructs the same values the jnp oracle produces (the packed
+    payload *layout* may differ — each backend decodes its own payloads,
+    tagged via ``meta['impl']``).
+    """
+    if impl not in _VALID_IMPLS:
+        raise ValueError(f"unknown quantizer impl {impl!r}")
+    _BACKEND_ENCODERS[(method, impl)] = encode_fn
+    _BACKEND_DECODERS[(method, impl)] = decode_fn
+
+
+def resolve_impl(impl: Optional[str] = None) -> str:
+    """Resolve the codec backend (see module docstring for order)."""
+    return resolve_backend_impl(impl, "REPRO_QUANT_IMPL", "quantizer",
+                                _VALID_IMPLS)
+
+
 def encode(cfg: QuantConfig, x: jnp.ndarray,
-           rng: Optional[jax.Array] = None) -> CommPayload:
+           rng: Optional[jax.Array] = None,
+           impl: Optional[str] = None) -> CommPayload:
+    fn = _BACKEND_ENCODERS.get((cfg.method, resolve_impl(impl)))
+    if fn is not None:
+        return fn(cfg, x, rng)
     return _ENCODERS[cfg.method](cfg, x, rng)
 
 
 def decode(cfg: QuantConfig, payload: CommPayload) -> jnp.ndarray:
+    fn = _BACKEND_DECODERS.get((cfg.method,
+                                payload.meta.get("impl", "jnp")))
+    if fn is not None:
+        return fn(cfg, payload)
     return _DECODERS[cfg.method](cfg, payload)
 
 

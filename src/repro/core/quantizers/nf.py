@@ -107,11 +107,14 @@ def _double_quant(cfg: base.QuantConfig, rng_vals: jnp.ndarray):
     groups = padded.reshape(-1, gq)
     gscale = jnp.max(jnp.abs(groups), axis=-1, keepdims=True)
     codes = jnp.round(groups / (gscale + _EPS) * 255.0).astype(jnp.uint8)
-    return codes.reshape(-1)[:nb + pad], gscale[:, 0].astype(jnp.float16), nb
+    # ship only the nb real codes — the group padding is reconstructed on
+    # the receiving side, not paid for on the wire
+    return codes.reshape(-1)[:nb], gscale[:, 0].astype(jnp.float16), nb
 
 
 def _double_dequant(codes: jnp.ndarray, gscale: jnp.ndarray, gq: int,
                     nb: int) -> jnp.ndarray:
+    codes = jnp.pad(codes.reshape(-1), (0, (-codes.size) % gq))
     groups = codes.reshape(-1, gq).astype(jnp.float32)
     vals = groups / 255.0 * gscale.astype(jnp.float32)[:, None]
     return vals.reshape(-1)[:nb]
@@ -138,8 +141,9 @@ def encode(cfg: base.QuantConfig, x: jnp.ndarray,
         scales = rng_vals.astype(jnp.float16)
     return CommPayload(
         data=words, scales=scales, aux=aux,
-        meta=dict(method="nf", bits=cfg.bits, shape=tuple(x.shape),
-                  dtype=str(x.dtype), n=n, n_blocks=blocks.shape[0],
+        meta=dict(method="nf", impl="jnp", bits=cfg.bits,
+                  shape=tuple(x.shape), dtype=str(x.dtype), n=n,
+                  n_blocks=blocks.shape[0],
                   double_quant=cfg.double_quant),
     )
 

@@ -1,0 +1,96 @@
+"""Fused Pallas wire codecs, registered behind the quantizer dispatch.
+
+The compressor sits serially on the split-learning wire (it runs on every
+microbatch before the cross-pod transfer), so its latency adds directly
+to the communication-critical path.  The jnp registrations in
+``rdfsq.py`` / ``nf.py`` materialize the 8-bit intermediate codes plus
+separate pack ops; the fused kernels in ``repro.kernels`` stream
+clip -> scale -> round -> pack in a single VMEM pass.  This module adapts
+those kernels to the ``CommPayload`` wire contract and registers them as
+the ``pallas`` backend, so ``core.split.quantized_ship``,
+``core.split.wire_payload`` and the split pipeline pick them up with zero
+call-site churn (``REPRO_QUANT_IMPL=pallas`` or ``impl='pallas'``).
+
+Payload layout note: the kernels pack codes per sample row / per block
+(so rows stay tile-aligned), while the jnp oracle packs one flat stream.
+Total wire bytes agree whenever the per-row code count divides the
+8/storage-bits packing factor; reconstruction numerics agree with the
+jnp ``roundtrip`` in every case (tested).  A payload is always decoded
+by the backend that produced it — ``meta['impl']`` travels in the static
+session handshake, never on the wire.
+
+Configs the kernels do not cover (``stats_axis='tensor'``, NF block
+sizes that straddle packed words) fall back to the jnp oracle encoder,
+whose payloads self-describe via the missing ``impl`` tag.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.packing import storage_bits
+from repro.core.payload import CommPayload
+from repro.core.quantizers import base, nf, rdfsq
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# RD-FSQ
+# ---------------------------------------------------------------------------
+
+def _rdfsq_encode(cfg: base.QuantConfig, x: jnp.ndarray,
+                  rng: Optional[jnp.ndarray] = None) -> CommPayload:
+    if cfg.stats_axis != "sample" or x.ndim < 2:
+        return rdfsq.encode(cfg, x, rng)  # kernel stats are per sample row
+    words, stats = ops.rdfsq_quantize(x, cfg.bits, cfg.clip_sigma)
+    return CommPayload(
+        data=words,
+        scales=stats,
+        meta=dict(method="rdfsq", impl="pallas", bits=cfg.bits,
+                  shape=tuple(x.shape), dtype=str(x.dtype)),
+    )
+
+
+def _rdfsq_decode(cfg: base.QuantConfig, payload: CommPayload) -> jnp.ndarray:
+    shape = payload.meta["shape"]
+    n_cols = math.prod(shape[1:])
+    x2d = ops.rdfsq_dequantize(
+        payload.data, payload.scales, cfg.bits, n_cols,
+        out_dtype=jnp.dtype(payload.meta.get("dtype", "float32")))
+    return x2d.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# NF-b (QLoRA)
+# ---------------------------------------------------------------------------
+
+def _nf_encode(cfg: base.QuantConfig, x: jnp.ndarray,
+               rng: Optional[jnp.ndarray] = None) -> CommPayload:
+    if cfg.block_size % (8 // storage_bits(cfg.bits)) != 0:
+        return nf.encode(cfg, x, rng)  # rows would straddle packed words
+    words, scales, aux = ops.nf_quantize(
+        x, cfg.bits, block=cfg.block_size, double_quant=cfg.double_quant,
+        dq_group=cfg.dq_group)
+    return CommPayload(
+        data=words, scales=scales, aux=aux,
+        meta=dict(method="nf", impl="pallas", bits=cfg.bits,
+                  shape=tuple(x.shape), dtype=str(x.dtype), n=x.size,
+                  double_quant=cfg.double_quant),
+    )
+
+
+def _nf_decode(cfg: base.QuantConfig, payload: CommPayload) -> jnp.ndarray:
+    shape = payload.meta["shape"]
+    n = payload.meta["n"]
+    flat = ops.nf_dequantize(
+        payload.data, payload.scales, payload.aux, cfg.bits, n,
+        block=cfg.block_size, double_quant=payload.meta["double_quant"],
+        dq_group=cfg.dq_group,
+        out_dtype=jnp.dtype(payload.meta.get("dtype", "float32")))
+    return flat.reshape(shape)
+
+
+base.register_backend("rdfsq", "pallas", _rdfsq_encode, _rdfsq_decode)
+base.register_backend("nf", "pallas", _nf_encode, _nf_decode)

@@ -79,8 +79,9 @@ def encode(cfg: base.QuantConfig, x: jnp.ndarray,
     return CommPayload(
         data=words,
         scales=scales,
-        meta=dict(method="rdfsq", bits=cfg.bits, shape=tuple(x.shape),
-                  dtype=str(x.dtype), stats_shape=tuple(lo.shape)),
+        meta=dict(method="rdfsq", impl="jnp", bits=cfg.bits,
+                  shape=tuple(x.shape), dtype=str(x.dtype),
+                  stats_shape=tuple(lo.shape)),
     )
 
 

@@ -29,16 +29,38 @@ from repro.core.quantizers import QuantConfig
 
 @dataclasses.dataclass(frozen=True)
 class SplitConfig:
-    """Where and how the model is cut."""
+    """Where and how the model is cut.
+
+    ``n_stages`` / ``stage_quants`` describe the *pipeline* topology used
+    by ``launch/split_pipeline.py`` (BEYOND-PAPER: the paper's deployment
+    is the 2-partition client/server special case).  ``n_stages`` equal
+    partitions give ``n_stages - 1`` quantized cuts; ``stage_quants``
+    optionally overrides the compressor per cut (empty = ``quant``
+    everywhere).  The in-graph single-cut path (``cut_layer`` +
+    ``compressor_roundtrip``) is unaffected by either field.
+    """
 
     cut_layer: int = -1  # boundary index into the block stack; -1 = L // 2
     quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
     learnable_codec: bool = True  # Figure-2 linear encoder/decoder
     enabled: bool = True
+    n_stages: int = 2  # pipeline partitions (paper: 2 = client/server)
+    stage_quants: Tuple[QuantConfig, ...] = ()  # per-cut overrides
 
     def resolve_cut(self, n_layers: int) -> int:
         cut = self.cut_layer if self.cut_layer >= 0 else n_layers // 2
         return min(max(cut, 0), n_layers)
+
+    def resolve_stage_quants(self) -> Tuple[QuantConfig, ...]:
+        """One QuantConfig per pipeline cut (length ``n_stages - 1``)."""
+        n_cuts = self.n_stages - 1
+        if not self.stage_quants:
+            return (self.quant,) * n_cuts
+        if len(self.stage_quants) != n_cuts:
+            raise ValueError(
+                f"stage_quants has {len(self.stage_quants)} entries for "
+                f"{n_cuts} cuts ({self.n_stages} stages)")
+        return tuple(self.stage_quants)
 
 
 # ---------------------------------------------------------------------------
@@ -99,9 +121,32 @@ def compressor_roundtrip(params: Optional[Dict], cfg: SplitConfig,
 # wire mode (true cross-pod transfer)
 # ---------------------------------------------------------------------------
 
+_WIRE_INT = {2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
+
+
+def _one_ppermute(a: jnp.ndarray, axis_name: str, perm) -> jnp.ndarray:
+    """ppermute one payload leaf at exactly its wire width.
+
+    Float leaves cross the link bitcast to the same-width unsigned int.
+    This is not cosmetic: XLA's simplifier reorders dtype converts across
+    collectives (and the CPU backend strips opt-barriers before it runs),
+    so a bf16 payload followed by an upcast can silently become an f32
+    collective-permute — 2x the wire bytes the CommPayload accounts for.
+    No convert can legally cross a bitcast, so the packed wire width is
+    pinned by construction on every backend.
+    """
+    dt = a.dtype
+    if jnp.issubdtype(dt, jnp.floating):
+        u = _WIRE_INT[dt.itemsize]
+        out = jax.lax.ppermute(jax.lax.bitcast_convert_type(a, u),
+                               axis_name, perm)
+        return jax.lax.bitcast_convert_type(out, dt)
+    return jax.lax.ppermute(a, axis_name, perm)
+
+
 def _tree_ppermute(tree, axis_name: str, perm):
     return jax.tree_util.tree_map(
-        lambda a: jax.lax.ppermute(a, axis_name, perm), tree)
+        lambda a: _one_ppermute(a, axis_name, perm), tree)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(0, 2, 3, 4))
@@ -131,8 +176,10 @@ def _ship_fwd(cfg, x, axis_name, perm, bwd_cfg):
 def _ship_bwd(cfg, axis_name, perm, bwd_cfg, _res, g):
     rev = [(dst, src) for (src, dst) in perm]
     if bwd_cfg is None:
-        # Paper scope: the cotangent returns uncompressed.
-        return (jax.lax.ppermute(g, axis_name, rev),)
+        # Paper scope: the cotangent returns uncompressed — but still at
+        # ITS dtype: _one_ppermute's bitcast stops XLA widening the
+        # backward wire to f32 (same convert-reorder as the forward).
+        return (_one_ppermute(g, axis_name, rev),)
     payload = quantizers.encode(bwd_cfg, g)
     shipped = _tree_ppermute(payload, axis_name, rev)
     return (quantizers.decode(bwd_cfg, shipped),)

@@ -20,7 +20,6 @@ can swap them 1:1 with zero call-site churn.
 """
 from __future__ import annotations
 
-import os
 from functools import partial
 from typing import Optional
 
@@ -28,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import attention_ref, decode_kernel, flash_kernel
+from repro.utils.dispatch import resolve_backend_impl
 
 _VALID_IMPLS = ("pallas", "jnp")
 
@@ -47,15 +47,8 @@ def compiled_shape_ok(block: int) -> bool:
 
 def resolve_impl(impl: Optional[str] = None) -> str:
     """Resolve the attention backend (see module docstring for order)."""
-    if impl is None:
-        impl = os.environ.get("REPRO_ATTN_IMPL", "").lower() or None
-    if impl is None:
-        return "pallas" if jax.default_backend() == "tpu" else "jnp"
-    if impl not in _VALID_IMPLS:
-        raise ValueError(
-            f"unknown attention impl {impl!r}; expected one of "
-            f"{_VALID_IMPLS}")
-    return impl
+    return resolve_backend_impl(impl, "REPRO_ATTN_IMPL", "attention",
+                                _VALID_IMPLS)
 
 
 # ---------------------------------------------------------------------------

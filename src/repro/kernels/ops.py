@@ -62,9 +62,9 @@ def rdfsq_quantize(x: jnp.ndarray, bits: int, clip_sigma: float = 3.0
     return words[:b, :cw], stats.astype(jnp.float16)
 
 
-@partial(jax.jit, static_argnames=("bits", "n_cols"))
+@partial(jax.jit, static_argnames=("bits", "n_cols", "out_dtype"))
 def rdfsq_dequantize(words: jnp.ndarray, stats: jnp.ndarray, bits: int,
-                     n_cols: int) -> jnp.ndarray:
+                     n_cols: int, out_dtype=jnp.float32) -> jnp.ndarray:
     b = words.shape[0]
     per = 8 // storage_bits(bits)
     wp = _pad_to(words, rdfsq_kernel.COLS // per, 1)
@@ -72,6 +72,7 @@ def rdfsq_dequantize(words: jnp.ndarray, stats: jnp.ndarray, bits: int,
     statsp = _pad_to(stats.astype(jnp.float32), rdfsq_kernel.ROWS, 0,
                      value=1.0)
     x = rdfsq_kernel.dequantize_pallas(wp, statsp, bits,
+                                       out_dtype=out_dtype,
                                        interpret=_interpret())
     return x[:b, :n_cols]
 
@@ -120,10 +121,11 @@ def nf_quantize(x: jnp.ndarray, bits: int, block: int = 64,
 
 
 @partial(jax.jit, static_argnames=("bits", "block", "double_quant",
-                                   "dq_group", "n"))
+                                   "dq_group", "n", "out_dtype"))
 def nf_dequantize(words: jnp.ndarray, scales: jnp.ndarray, aux: dict,
                   bits: int, n: int, block: int = 64,
-                  double_quant: bool = True, dq_group: int = 256):
+                  double_quant: bool = True, dq_group: int = 256,
+                  out_dtype=jnp.float32):
     nb = words.shape[0]
     m = aux["block_min"]
     if double_quant:
@@ -140,5 +142,6 @@ def nf_dequantize(words: jnp.ndarray, scales: jnp.ndarray, aux: dict,
     rp = jnp.pad(rng, ((0, bpad), (0, 0)))
     book = jnp.asarray(nf_codebook(bits), jnp.float32)
     x = nf_kernel.dequantize_pallas(wp, mp, rp, book, bits, block,
+                                    out_dtype=out_dtype,
                                     interpret=_interpret())
     return x[:nb].reshape(-1)[:n]

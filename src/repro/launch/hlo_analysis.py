@@ -37,6 +37,11 @@ _WHILE_RE = re.compile(
     r"condition=%?([\w\.\-]+)\s*,\s*body=%?([\w\.\-]+)")
 _CALL_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
 _CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+# conditional( branch computations: 2-way true/false form and the N-way
+# branch_computations={...} form
+_COND_TF_RE = re.compile(
+    r"true_computation=%?([\w\.\-]+)\s*,\s*false_computation=%?([\w\.\-]+)")
+_COND_BR_RE = re.compile(r"branch_computations=\{([^}]*)\}")
 _CONST_RE = re.compile(r"constant\((\d+)\)")
 _DOT_OUT_RE = re.compile(r"=\s*((?:\([^=]*?\))|(?:[\w\[\],{}]+))\s+dot\(")
 _LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
@@ -195,7 +200,11 @@ def analyze(hlo: str) -> Dict:
     # real executions (count everything x trips); fusion/call bodies only
     # contribute FLOPs/collectives — their interior elementwise ops do not
     # write HBM (the fusion instruction's own output already counted).
+    # conditional( branches are NOT plain edges: exactly one branch runs
+    # per execution, so each conditional contributes the elementwise MAX
+    # over its branch subtrees, once — not the sum ("always-taken").
     edges: Dict[str, List[Tuple[str, int, bool]]] = defaultdict(list)
+    cond_groups: Dict[str, List[List[str]]] = defaultdict(list)
     for name, lines in comps.items():
         for line in lines:
             m_while = _WHILE_RE.search(line)
@@ -209,6 +218,15 @@ def analyze(hlo: str) -> Dict:
                     _trip_count(comps.get(cond, []))
                 edges[name].append((body, trips, True))
                 edges[name].append((cond, trips, True))
+            m_tf = _COND_TF_RE.search(line)
+            if m_tf:
+                cond_groups[name].append([m_tf.group(1), m_tf.group(2)])
+            else:
+                m_br = _COND_BR_RE.search(line)
+                if m_br:
+                    cond_groups[name].append(
+                        [b.strip().lstrip("%")
+                         for b in m_br.group(1).split(",") if b.strip()])
         text = "\n".join(lines)
         for child in _CALL_RE.findall(text):
             edges[name].append((child, 1, False))
@@ -216,36 +234,68 @@ def analyze(hlo: str) -> Dict:
             if child not in [c for c, _, _ in edges[name]]:
                 edges[name].append((child, 1, False))
 
-    totals = dict(flops=0.0, bytes_out=0)
-    coll_total: Dict[str, int] = defaultdict(int)
-    coll_n: Dict[str, int] = defaultdict(int)
-    seen_guard = [0]
+    def _zero():
+        return dict(flops=0.0, bytes=0, coll=defaultdict(int),
+                    coll_n=defaultdict(int))
 
-    def walk(name: str, mult: int, count_bytes: bool = True,
-             depth: int = 0):
-        if name not in per_comp or depth > 64:
-            return
-        seen_guard[0] += 1
-        if seen_guard[0] > 200000:
-            return
+    memo: Dict[Tuple[str, bool], Dict] = {}
+    visiting = set()
+    truncations = [0]  # bumped whenever a back-edge is skipped
+
+    def subtree(name: str, count_bytes: bool) -> Dict:
+        """Per-execution totals of ``name`` including everything it calls.
+
+        The call graph of valid HLO is a DAG, so memoization makes the
+        walk linear; ``visiting`` breaks cycles a malformed module could
+        contain, and any subtree that hit a back-edge is NOT memoized
+        (nor are its ancestors), so truncated totals never poison the
+        cache.
+        """
+        if name not in per_comp:
+            return _zero()
+        if name in visiting:
+            truncations[0] += 1
+            return _zero()
+        key = (name, count_bytes)
+        if key in memo:
+            return memo[key]
+        trunc_before = truncations[0]
+        visiting.add(name)
         flops, bytes_out, coll, coll_counts = per_comp[name]
-        totals["flops"] += flops * mult
-        if count_bytes:
-            totals["bytes_out"] += bytes_out * mult
-        for op, b in coll.items():
-            coll_total[op] += b * mult
-            coll_n[op] += coll_counts[op] * mult
-        for child, m, cb in edges.get(name, []):
-            walk(child, mult * m, count_bytes and cb, depth + 1)
+        tot = _zero()
+        tot["flops"] = flops
+        tot["bytes"] = bytes_out if count_bytes else 0
+        tot["coll"].update(coll)
+        tot["coll_n"].update(coll_counts)
+        for child, mult, cb in edges.get(name, []):
+            sub = subtree(child, count_bytes and cb)
+            tot["flops"] += sub["flops"] * mult
+            tot["bytes"] += sub["bytes"] * mult
+            for k, v in sub["coll"].items():
+                tot["coll"][k] += v * mult
+            for k, v in sub["coll_n"].items():
+                tot["coll_n"][k] += v * mult
+        for branches in cond_groups.get(name, []):
+            subs = [subtree(b, count_bytes) for b in branches]
+            if not subs:
+                continue
+            tot["flops"] += max(s["flops"] for s in subs)
+            tot["bytes"] += max(s["bytes"] for s in subs)
+            for field in ("coll", "coll_n"):
+                for k in set().union(*[s[field].keys() for s in subs]):
+                    tot[field][k] += max(s[field].get(k, 0) for s in subs)
+        visiting.discard(name)
+        if truncations[0] == trunc_before:
+            memo[key] = tot
+        return tot
 
-    if entry:
-        walk(entry, 1)
+    tot = subtree(entry, True) if entry else _zero()
     return dict(
-        dot_flops=totals["flops"],
-        bytes_out=float(totals["bytes_out"]),
-        collective_bytes=int(sum(coll_total.values())),
-        collective_by_op={k: int(v) for k, v in coll_total.items()},
-        collective_counts={k: int(v) for k, v in coll_n.items()},
+        dot_flops=tot["flops"],
+        bytes_out=float(tot["bytes"]),
+        collective_bytes=int(sum(tot["coll"].values())),
+        collective_by_op={k: int(v) for k, v in tot["coll"].items()},
+        collective_counts={k: int(v) for k, v in tot["coll_n"].items()},
         n_computations=len(comps),
     )
 

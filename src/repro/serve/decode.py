@@ -74,8 +74,12 @@ def generate(params, cfg: ArchConfig, batch: Dict, *, n_new: int,
     """Prefill + greedy/sampled generation of ``n_new`` tokens."""
     if rng is None:
         rng = jax.random.PRNGKey(0)
+    # Split BEFORE consuming: prefill (dropout / quantizer noise) and the
+    # first sampled token must never share a key — reusing ``rng`` for
+    # both correlates the first sample with the prefill randomness.
+    rng, prefill_rng = jax.random.split(rng)
     logits, caches = prefill(params, cfg, batch, cache_len, window=window,
-                             rng=rng)
+                             rng=prefill_rng)
     if cfg.modality == "audio":
         prompt_len = batch["codes"].shape[-1]
         bsz = batch["codes"].shape[0]
@@ -98,7 +102,8 @@ def generate(params, cfg: ArchConfig, batch: Dict, *, n_new: int,
         return jax.random.categorical(key, last / temperature, axis=-1)
 
     out = []
-    tok = pick(logits, rng)
+    rng, first_key = jax.random.split(rng)
+    tok = pick(logits, first_key)
     for i in range(n_new):
         out.append(tok)
         qpos = jnp.full((bsz,), prompt_len + i, jnp.int32)

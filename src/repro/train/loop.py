@@ -36,6 +36,25 @@ def init_state(key, cfg: ArchConfig, opt_cfg: AdamWConfig) -> TrainState:
                       step=jnp.zeros((), jnp.int32))
 
 
+def apply_gradients(state: TrainState, grads, opt_cfg: AdamWConfig, *,
+                    warmup_steps: int = 0,
+                    total_steps: int = 0) -> Tuple[TrainState, Dict]:
+    """Warmup-cosine scheduled AdamW update of a TrainState.
+
+    The one place the schedule meets the optimizer — shared by the
+    monolithic train step below and the split-pipeline trainer
+    (``launch/split_pipeline.train_pipeline``).  ``total_steps == 0``
+    disables the schedule (constant lr).
+    """
+    lr_scale = warmup_cosine(state.step, warmup_steps=warmup_steps,
+                             total_steps=total_steps) \
+        if total_steps else 1.0
+    new_params, new_opt, opt_metrics = adamw_update(
+        state.params, grads, state.opt, opt_cfg, lr_scale)
+    return TrainState(params=new_params, opt=new_opt,
+                      step=state.step + 1), opt_metrics
+
+
 def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, *,
                     window: Optional[int] = None,
                     total_steps: int = 10000,
@@ -129,13 +148,11 @@ def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, *,
     def train_step(state: TrainState, batch: Dict,
                    rng: jax.Array) -> Tuple[TrainState, Dict]:
         grads, metrics = compute_grads(state.params, batch, rng)
-        lr_scale = warmup_cosine(state.step, warmup_steps=warmup_steps,
-                                 total_steps=total_steps)
-        new_params, new_opt, opt_metrics = adamw_update(
-            state.params, grads, state.opt, opt_cfg, lr_scale)
+        state, opt_metrics = apply_gradients(state, grads, opt_cfg,
+                                             warmup_steps=warmup_steps,
+                                             total_steps=total_steps)
         metrics.update(opt_metrics)
-        return TrainState(params=new_params, opt=new_opt,
-                          step=state.step + 1), metrics
+        return state, metrics
 
     return train_step
 

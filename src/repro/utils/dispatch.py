@@ -1,0 +1,32 @@
+"""Shared kernel-backend selection policy.
+
+One ladder for every Pallas/jnp dispatch layer (attention via
+``REPRO_ATTN_IMPL``, wire codecs via ``REPRO_QUANT_IMPL``):
+
+  1. explicit ``impl=`` keyword (parity tests / benchmarks);
+  2. the per-subsystem environment variable (zero-code A/B flips);
+  3. default: Pallas on TPU backends, the jnp reference elsewhere (the
+     interpreter is exact but slow, so CPU CI stays on jnp unless a
+     test opts in).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+
+DEFAULT_IMPLS = ("pallas", "jnp")
+
+
+def resolve_backend_impl(impl: Optional[str], env_var: str, what: str,
+                         valid: Tuple[str, ...] = DEFAULT_IMPLS) -> str:
+    """Resolve ``impl`` through the kwarg -> env -> backend-default ladder."""
+    if impl is None:
+        impl = os.environ.get(env_var, "").lower() or None
+    if impl is None:
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl not in valid:
+        raise ValueError(
+            f"unknown {what} impl {impl!r}; expected one of {valid}")
+    return impl

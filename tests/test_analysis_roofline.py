@@ -42,6 +42,81 @@ ENTRY %main (p: f32[16,128]) -> f32[16,128] {
     assert by_op.get("all-reduce") == 16 * 128 * 4
 
 
+# a conditional whose branches do a 64x64 @ 64x64 dot (true) and a
+# 32x64 @ 64x64 dot (false): exactly one branch runs per execution, so
+# the analyzer must charge max(branch) = the true branch, once
+_COND_HLO = """HloModule m
+
+%true_comp (t: f32[64,64]) -> f32[64,64] {
+  %t = f32[64,64] parameter(0)
+  ROOT %d1 = f32[64,64] dot(f32[64,64] %t, f32[64,64] %t), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%false_comp (f: f32[64,64]) -> f32[64,64] {
+  %f = f32[64,64] parameter(0)
+  %s = f32[32,64] slice(%f), slice={[0:32], [0:64]}
+  %d2 = f32[32,64] dot(f32[32,64] %s, f32[64,64] %f), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %p = f32[64,64] pad(f32[32,64] %d2, f32[] %c), padding=0_32x0_0
+}
+
+ENTRY %main (pred.1: pred[], x: f32[64,64]) -> f32[64,64] {
+  %pred.1 = pred[] parameter(0)
+  %x = f32[64,64] parameter(1)
+  ROOT %cond = f32[64,64] conditional(%pred.1, %x, %x), true_computation=%true_comp, false_computation=%false_comp
+}
+"""
+
+
+def test_conditional_counts_max_branch_once():
+    res = analyze(_COND_HLO)
+    true_flops = 2 * 64 * 64 * 64
+    false_flops = 2 * 32 * 64 * 64
+    # not 0 (branches ignored), not true+false (always-taken): max, once
+    assert res["dot_flops"] == pytest.approx(true_flops), res
+    assert res["dot_flops"] < true_flops + false_flops
+
+
+def test_conditional_branch_computations_form():
+    hlo = _COND_HLO.replace(
+        "true_computation=%true_comp, false_computation=%false_comp",
+        "branch_computations={%true_comp, %false_comp}")
+    res = analyze(hlo)
+    assert res["dot_flops"] == pytest.approx(2 * 64 * 64 * 64), res
+
+
+def test_conditional_inside_loop_scales_with_trips():
+    """max-over-branches composes with while trip counts."""
+    hlo = """HloModule m
+
+%true_comp (t: f32[64,64]) -> f32[64,64] {
+  %t = f32[64,64] parameter(0)
+  ROOT %d1 = f32[64,64] dot(f32[64,64] %t, f32[64,64] %t), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%false_comp (f: f32[64,64]) -> f32[64,64] {
+  ROOT %f = f32[64,64] parameter(0)
+}
+
+%body (b: f32[64,64]) -> f32[64,64] {
+  %b = f32[64,64] parameter(0)
+  ROOT %cond = f32[64,64] conditional(%pr, %b, %b), true_computation=%true_comp, false_computation=%false_comp
+}
+
+%cond_comp (c: f32[64,64]) -> pred[] {
+  %c = f32[64,64] parameter(0)
+  %k = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %k), direction=LT
+}
+
+ENTRY %main (x: f32[64,64]) -> f32[64,64] {
+  %x = f32[64,64] parameter(0)
+  ROOT %w = f32[64,64] while(%x), condition=%cond_comp, body=%body
+}
+"""
+    res = analyze(hlo)
+    assert res["dot_flops"] == pytest.approx(10 * 2 * 64 * 64 * 64), res
+
+
 def test_split_computations_entry():
     hlo = """HloModule m
 

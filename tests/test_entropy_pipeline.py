@@ -8,6 +8,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.core.entropy import (differential_entropy_bits,
+                                discretized_entropy_bits,
                                 estimate_optimal_bits, optimal_bits,
                                 scott_bandwidth)
 from repro.data.pipeline import make_pipeline
@@ -45,6 +46,44 @@ def test_optimal_bits_ceiling():
 def test_scott_rule():
     assert abs(scott_bandwidth(1000, 1.0) -
                (4 / 3) ** 0.2 * 1000 ** -0.2) < 1e-9
+
+
+def test_estimate_optimal_bits_scale_invariant():
+    """H(aX) = H(X) + log2|a| must NOT leak into the bit choice: the
+    quantizers normalize by the data range, so a client rescaling its
+    activations cannot change the optimal wire width."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (8192,))
+    b1, e1 = estimate_optimal_bits(x)
+    for a in (1e-3, 0.125, 7.0, 512.0):
+        b2, e2 = estimate_optimal_bits(a * x)
+        assert b2 == b1, (a, b1, b2)
+        assert abs(e2 - e1) < 0.1, (a, e1, e2)
+    # raw differential entropy (the paper protocol) is NOT invariant —
+    # the regression guards exactly this discrepancy
+    raw1, _ = differential_entropy_bits(x)
+    raw2, _ = differential_entropy_bits(512.0 * x)
+    assert abs(raw2 - raw1) > 8.0
+
+
+def test_estimate_matches_paper_table1_conclusion():
+    """Compactly supported activations sit at the paper's ~1.8 bits ->
+    2-bit optimal, now at EVERY scale: h(U/sigma) = log2(sqrt(12)) ~ 1.79
+    regardless of the range the client picked."""
+    u = jax.random.uniform(jax.random.PRNGKey(4), (8192,))
+    for scale in (1.0, 100.0):
+        bits, ent = estimate_optimal_bits(scale * u)
+        assert bits == 2, (scale, bits, ent)
+        # theoretical log2(sqrt(12)) ~ 1.79 plus the KDE's boundary
+        # smoothing bias (~0.16 on a hard-edged density)
+        assert math.log2(math.sqrt(12.0)) - 0.1 < ent < 2.0, ent
+
+
+def test_discretized_entropy_bin_width():
+    """H_disc ~ h(X) - log2(delta): halving the bin adds one bit."""
+    x = jax.random.normal(jax.random.PRNGKey(5), (8192,))
+    e1, _ = discretized_entropy_bits(x, 0.5)
+    e2, _ = discretized_entropy_bits(x, 0.25)
+    assert abs((e2 - e1) - 1.0) < 1e-9
 
 
 def test_estimate_stable_across_batches():

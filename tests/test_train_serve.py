@@ -96,6 +96,26 @@ def test_generate_runs():
     assert int(out.min()) >= 0 and int(out.max()) < cfg.vocab_size
 
 
+def test_generate_rng_discipline():
+    """Regression for the prefill/first-pick key reuse: sampling must be
+    reproducible under the same rng and respond to a different rng, and
+    greedy output must not depend on the rng at all."""
+    cfg = get_config("llama3_2_3b").reduced()
+    params = tf.init_params(KEY, cfg)
+    batch = dict(tokens=jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size))
+    kw = dict(n_new=8, cache_len=32, temperature=1.0)
+    a = generate(params, cfg, batch, rng=jax.random.PRNGKey(1), **kw)
+    b = generate(params, cfg, batch, rng=jax.random.PRNGKey(1), **kw)
+    c = generate(params, cfg, batch, rng=jax.random.PRNGKey(2), **kw)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert np.any(np.asarray(a) != np.asarray(c))
+    g1 = generate(params, cfg, batch, n_new=8, cache_len=32,
+                  rng=jax.random.PRNGKey(1))
+    g2 = generate(params, cfg, batch, n_new=8, cache_len=32,
+                  rng=jax.random.PRNGKey(2))
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+
+
 def test_int8_kv_cache_decode_close_to_full():
     """Beyond-paper int8 KV cache: decode matches full forward to ~1%."""
     cfg = dataclasses.replace(_no_split(get_config("llama3_2_3b").reduced()),
