@@ -9,9 +9,16 @@ the tinyllava boundary activations:
     two-device LAN regime) and on a 50 GB/s TPU ICI link (our target).
 
 Reported per 100 batches to match the paper's units.
+
+BEYOND-PAPER: ``run`` additionally scales the many-client hub
+(``launch/split_hub``): per-link wire traffic for N clients sharing one
+server, heterogeneous 2-bit/4-bit compressors, written to
+``results/table4_hub_links.json``.
 """
 from __future__ import annotations
 
+import json
+import os
 import pickle
 import time
 
@@ -21,8 +28,9 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import get_config
-from repro.core import QuantConfig, SplitConfig, wire_payload
+from repro.core import HubConfig, QuantConfig, SplitConfig, wire_payload
 from repro.data.pipeline import make_pipeline
+from repro.launch import schedules
 from repro.models import transformer as tf
 from repro.models.layers.mlp import mlp_forward
 
@@ -75,7 +83,43 @@ def run():
     red = 1 - rows[("rdfsq", 2)]["mb"] / base
     emit("table4/reduction_2bit_vs_16bit", 0.0,
          f"byte_reduction={red:.4f};paper_claims=0.875")
+    rows["hub"] = run_hub(cfg)
     return rows
+
+
+def run_hub(cfg, micro_batch: int = 8, seq: int = 32,
+            clients_list=(1, 2, 4, 8)) -> dict:
+    """Per-link hub wire traffic vs number of clients.
+
+    Static CommPayload accounting over the star topology: each client's
+    link carries its own compressor's payload (alternating 2-bit RD-FSQ /
+    4-bit NF), so total server ingress grows with the MIX of clients, not
+    just their count.  The dry-run in ``launch/split_hub`` asserts this
+    same table against the lowered HLO; here we tabulate its scaling.
+    """
+    out = {}
+    for n in clients_list:
+        quants = tuple(QuantConfig(method="rdfsq", bits=2) if c % 2 == 0
+                       else QuantConfig(method="nf", bits=4)
+                       for c in range(n))
+        hub = HubConfig(n_clients=n, client_quants=quants)
+        wire = schedules.hub_wire_bytes(cfg, hub, micro_batch, seq)
+        links = {f"{s}->{d}": v["fwd"]
+                 for (s, d), v in sorted(wire["links"].items())}
+        ingress = wire["fwd_total"]
+        out[n] = dict(links=links, server_ingress_bytes_per_tick=ingress,
+                      lan_s_per_tick=ingress / LAN_BPS)
+        emit(f"table4/hub_{n}clients", 0.0,
+             f"server_ingress_B_per_tick={ingress};"
+             f"lan_s_per_tick={ingress / LAN_BPS:.6f};"
+             f"links={len(links)}")
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "table4_hub_links.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({str(k): v for k, v in out.items()}, f, indent=1)
+    print(f"saved {path}")
+    return out
 
 
 if __name__ == "__main__":

@@ -8,6 +8,15 @@ steps); on real hardware run the 100M configuration:
 
     PYTHONPATH=src python examples/split_training_e2e.py \
         --d-model 768 --layers 12 --steps 300 --batch 16
+
+``--mode hub-async`` instead drives the refactored split stack
+(stage programs / wire links / schedulers, ROADMAP item 2): N clients
+with heterogeneous 2-bit/4-bit wire compressors and different tick
+rates train their bottom halves against one shared server stage, the
+server applying gradients per arrival (``launch/split_hub.train_hub``):
+
+    PYTHONPATH=src python examples/split_training_e2e.py \
+        --mode hub-async --clients 3 --steps 30
 """
 import argparse
 import dataclasses
@@ -16,7 +25,7 @@ import jax.numpy as jnp
 
 from repro import checkpoint
 from repro.configs import get_config
-from repro.core import QuantConfig, SplitConfig
+from repro.core import HubConfig, QuantConfig, SplitConfig
 from repro.data.pipeline import make_pipeline
 from repro.launch.roofline import param_counts
 from repro.optim import AdamWConfig
@@ -41,25 +50,9 @@ def build_cfg(d_model: int, layers: int, method: str, bits: int):
     return cfg
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--d-model", type=int, default=256)
-    ap.add_argument("--layers", type=int, default=6)
-    ap.add_argument("--steps", type=int, default=120)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=48)
-    ap.add_argument("--method", default="rdfsq")
-    ap.add_argument("--bits", type=int, default=2)
-    ap.add_argument("--lr", type=float, default=1e-3)
-    ap.add_argument("--ckpt", default="/tmp/qtllava_e2e.npz")
-    args = ap.parse_args()
-
-    cfg = build_cfg(args.d_model, args.layers, args.method, args.bits)
-    n = param_counts(cfg)["total"]
-    print(f"training {cfg.name}: ~{n / 1e6:.1f}M params, "
-          f"{args.method}-{args.bits}bit split compressor, "
-          f"{args.steps} steps")
-
+def run_e2e(cfg, args) -> None:
+    """The paper's recipe: monolithic forward with the in-graph
+    compressor roundtrip at the cut, composite loss, checkpointing."""
     data = make_pipeline(cfg, args.batch, args.seq, seed=0)
     state, history = train_loop(
         cfg, AdamWConfig(lr=args.lr), data, n_steps=args.steps,
@@ -73,6 +66,76 @@ def main():
           f"({(1 - last / first) * 100:.1f}% reduction)")
     checkpoint.save(args.ckpt, state)
     print("checkpoint:", args.ckpt)
+
+
+def run_hub_async(cfg, args) -> None:
+    """BEYOND-PAPER: the many-client hub on the refactored layers.
+
+    Clients alternate 2-bit RD-FSQ / 4-bit NF wire compressors and tick
+    at different rates; the shared server applies gradients per arrival
+    (staleness-tolerant) and per-client codec calibration EMAs stay
+    isolated.  Mesh-free (in-graph wire form) — the SPMD lockstep twin
+    with real collective-permutes is ``launch/split_hub --smoke``.
+
+    The hub schedules the LLM stack (embed + blocks + head), so the VLM
+    config runs in text modality here — the split cut the hub exercises
+    is the block-stack midpoint, not the paper's connector cut.
+    """
+    from repro.launch.split_hub import train_hub
+
+    cfg = dataclasses.replace(cfg, modality="text")
+    n = args.clients
+    hub = HubConfig(
+        n_clients=n,
+        client_quants=tuple(
+            QuantConfig(method="rdfsq", bits=2) if c % 2 == 0
+            else QuantConfig(method="nf", bits=4) for c in range(n)),
+        bwd_quant=QuantConfig(method=args.method, bits=args.bits),
+        tick_rates=tuple(1 + c % 3 for c in range(n)))
+    pipe = make_pipeline(cfg, n * args.batch, args.seq, seed=0)
+
+    def batches():
+        while True:
+            b = next(pipe)
+            yield (b["tokens"].reshape(n, args.batch, -1),
+                   b["labels"].reshape(n, args.batch, -1))
+
+    out = train_hub(cfg, hub, AdamWConfig(lr=args.lr), batches(),
+                    micro_batch=args.batch, seq=args.seq, mode="async",
+                    n_ticks=args.steps)
+    hist = out["history"]
+    for i in range(0, len(hist), max(len(hist) // 10, 1)):
+        arrived = int(out["masks"][i].sum())
+        print(f"  tick {i:4d} loss={hist[i]:.4f} arrivals={arrived}/{n}")
+    print(f"hub loss {hist[0]:.4f} -> {hist[-1]:.4f} over {args.steps} "
+          f"ticks; per-client wire rel err "
+          + ", ".join(f"{v:.4f}" for v in out["quant_rel_err"]))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("e2e", "hub-async"), default="e2e")
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=6)
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=48)
+    ap.add_argument("--method", default="rdfsq")
+    ap.add_argument("--bits", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--clients", type=int, default=3)
+    ap.add_argument("--ckpt", default="/tmp/qtllava_e2e.npz")
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.d_model, args.layers, args.method, args.bits)
+    n = param_counts(cfg)["total"]
+    print(f"training {cfg.name}: ~{n / 1e6:.1f}M params, "
+          f"{args.method}-{args.bits}bit split compressor, "
+          f"{args.steps} steps, mode={args.mode}")
+    if args.mode == "hub-async":
+        run_hub_async(cfg, args)
+    else:
+        run_e2e(cfg, args)
 
 
 if __name__ == "__main__":

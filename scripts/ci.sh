@@ -21,8 +21,16 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m benchmarks.run --fast --only roofline
 
 # Split-pipeline smoke: N=4-stage dry-run on 8 fake devices (asserts the
-# static CommPayload wire bytes against the HLO collective-permute
-# measurement) + a short reduced-config training run (asserts the loss
-# decreases across the quantized wire).
+# static per-link CommPayload wire bytes against the HLO
+# collective-permute measurement, incl. a mixed 2/4-bit topology) + a
+# short reduced-config training run (asserts the loss decreases across
+# the quantized wire).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m repro.launch.split_pipeline --smoke
+
+# Split-hub smoke: 3 clients + 1 server on 8 fake devices with
+# heterogeneous per-client quants — per-link HLO byte assertions, the
+# hub(N=1) == pipeline loss parity check, and a short async-mode
+# (staleness-tolerant) training run.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m repro.launch.split_hub --smoke

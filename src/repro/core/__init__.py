@@ -1,14 +1,20 @@
 """Core — the paper's contribution: compression + split-learning boundary."""
 from repro.core.payload import CommPayload, bits_per_scalar
 from repro.core.quantizers import QuantConfig, decode, encode, roundtrip
-from repro.core.split import (SplitConfig, analytic_bits_per_scalar,
-                              compressor_roundtrip, init_codec_params,
-                              quantized_ship, wire_payload)
+from repro.core.split import (HubConfig, SplitConfig, WireLink,
+                              analytic_bits_per_scalar, calib_scale_error,
+                              compressor_roundtrip, group_links,
+                              init_codec_params, init_wire_calib,
+                              pipeline_links, quantize_cotangent,
+                              quantized_ship, update_wire_calib,
+                              wire_payload)
 from repro.core import entropy, packing
 
 __all__ = [
     "CommPayload", "bits_per_scalar", "QuantConfig", "encode", "decode",
     "roundtrip", "SplitConfig", "compressor_roundtrip", "init_codec_params",
     "quantized_ship", "wire_payload", "analytic_bits_per_scalar", "entropy",
-    "packing",
+    "packing", "HubConfig", "WireLink", "group_links", "pipeline_links",
+    "quantize_cotangent", "init_wire_calib", "update_wire_calib",
+    "calib_scale_error",
 ]

@@ -16,6 +16,7 @@ encoder on the client, a quantizer, the wire, a dequantizer, and an
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 from typing import Dict, Optional, Tuple
 
@@ -186,6 +187,226 @@ def _ship_bwd(cfg, axis_name, perm, bwd_cfg, _res, g):
 
 
 quantized_ship.defvjp(_ship_fwd, _ship_bwd)
+
+
+# ---------------------------------------------------------------------------
+# wire links — layer 2 of the stage/wire/scheduler decomposition
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WireLink:
+    """One directed quantized edge of a split topology.
+
+    A link owns everything about its cut: the forward ``QuantConfig``, the
+    optional backward (cotangent) quant, and the *per-link* static byte
+    accounting.  ``src``/``dst`` are stage indices on the ``pod`` mesh
+    axis.  ``client`` tags hub links with the owning client id (chain
+    links leave it None) — per-client quantizer calibration state is keyed
+    by it (:func:`init_wire_calib` / :func:`update_wire_calib`).
+
+    Byte accounting contract: each link is counted exactly once, on the
+    devices that execute it.  This replaces the old
+    ``pipeline_wire_bytes`` sum over distinct cut configs, which charged
+    every device with every cut group's payload — an SPMD overcount
+    whenever per-cut ``stage_quants`` were heterogeneous (a device at a
+    2-bit cut never actually transmits the 4-bit cut's payload, even
+    though the SPMD program makes it execute that ship op).
+    """
+
+    src: int
+    dst: int
+    quant: QuantConfig
+    bwd_quant: Optional[QuantConfig] = None
+    client: Optional[int] = None
+
+    @property
+    def perm(self) -> Tuple[Tuple[int, int], ...]:
+        return ((self.src, self.dst),)
+
+    def ship(self, x: jnp.ndarray, axis_name: str = "pod") -> jnp.ndarray:
+        """The real wire: encode -> ppermute src->dst -> decode."""
+        return quantized_ship(self.quant, x, axis_name, self.perm,
+                              self.bwd_quant)
+
+    def fwd_wire_bytes(self, x_sds) -> int:
+        """Static forward payload bytes for one activation of shape/dtype
+        ``x_sds`` (works on ShapeDtypeStruct — no data touched)."""
+        payload = jax.eval_shape(partial(quantizers.encode, self.quant),
+                                 jax.ShapeDtypeStruct(x_sds.shape,
+                                                      x_sds.dtype))
+        return payload.wire_bytes()
+
+    def bwd_wire_bytes(self, x_sds) -> int:
+        """Static backward (cotangent) bytes: the packed payload when
+        ``bwd_quant`` is set, else the uncompressed activation bytes (the
+        paper's forward-only compression scope)."""
+        if self.bwd_quant is None:
+            return math.prod(x_sds.shape) * jnp.dtype(x_sds.dtype).itemsize
+        payload = jax.eval_shape(partial(quantizers.encode, self.bwd_quant),
+                                 jax.ShapeDtypeStruct(x_sds.shape,
+                                                      x_sds.dtype))
+        return payload.wire_bytes()
+
+
+def pipeline_links(split: SplitConfig,
+                   bwd_quant: Optional[QuantConfig] = None
+                   ) -> Tuple[WireLink, ...]:
+    """Chain topology: cut c connects stage c -> c+1."""
+    return tuple(WireLink(src=c, dst=c + 1, quant=q, bwd_quant=bwd_quant)
+                 for c, q in enumerate(split.resolve_stage_quants()))
+
+
+def group_links(links: Tuple[WireLink, ...]
+                ) -> Tuple[Tuple[QuantConfig, Optional[QuantConfig],
+                                 Tuple[WireLink, ...]], ...]:
+    """Group links with identical (quant, bwd_quant) so a scheduler can
+    emit ONE collective per group (a multi-pair ppermute) instead of one
+    per link.  Only valid when no destination repeats within a group —
+    chain cuts qualify; hub links to the shared server do not (ppermute
+    forbids a destination receiving from two sources), so hub schedulers
+    ship per link."""
+    groups: list = []
+    for link in links:
+        for i, (q, bq, ls) in enumerate(groups):
+            if q == link.quant and bq == link.bwd_quant:
+                groups[i] = (q, bq, ls + (link,))
+                break
+        else:
+            groups.append((link.quant, link.bwd_quant, (link,)))
+    return tuple(groups)
+
+
+@dataclasses.dataclass(frozen=True)
+class HubConfig:
+    """Many-client split-learning hub: N clients sharing one server stage.
+
+    BEYOND-PAPER (ROADMAP item 2): the paper deploys exactly one client
+    and one server; the SL-for-LLM survey and VFLAIR-LLM frame the real
+    setting as N clients — each with its own data distribution, quantizer
+    calibration and tick rate — sharing one server stack.  Stage layout:
+    pods 0..N-1 run per-client bottom halves (embed + L/2 blocks), pod N
+    runs the shared server half (L/2 blocks + head), batched over
+    arriving clients.
+
+    ``client_quants`` optionally overrides the wire compressor per client
+    (empty = ``quant`` everywhere) — heterogeneous entries exercise the
+    per-link byte accounting.  ``tick_rates`` drives the async scheduler:
+    client c produces a microbatch every ``tick_rates[c]`` global ticks
+    (empty = all 1 = lockstep-equivalent arrival pattern).
+    """
+
+    n_clients: int = 1
+    quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
+    client_quants: Tuple[QuantConfig, ...] = ()
+    bwd_quant: Optional[QuantConfig] = None
+    tick_rates: Tuple[int, ...] = ()
+
+    @property
+    def server_stage(self) -> int:
+        """Pod index of the shared server stage."""
+        return self.n_clients
+
+    def resolve_client_quants(self) -> Tuple[QuantConfig, ...]:
+        if not self.client_quants:
+            return (self.quant,) * self.n_clients
+        if len(self.client_quants) != self.n_clients:
+            raise ValueError(
+                f"client_quants has {len(self.client_quants)} entries for "
+                f"{self.n_clients} clients")
+        return tuple(self.client_quants)
+
+    def resolve_tick_rates(self) -> Tuple[int, ...]:
+        if not self.tick_rates:
+            return (1,) * self.n_clients
+        if len(self.tick_rates) != self.n_clients:
+            raise ValueError(
+                f"tick_rates has {len(self.tick_rates)} entries for "
+                f"{self.n_clients} clients")
+        if any(r < 1 for r in self.tick_rates):
+            raise ValueError(f"tick rates must be >= 1: {self.tick_rates}")
+        return tuple(self.tick_rates)
+
+    def links(self) -> Tuple[WireLink, ...]:
+        """Star topology: client c -> server, one link per client."""
+        return tuple(WireLink(src=c, dst=self.server_stage, quant=q,
+                              bwd_quant=self.bwd_quant, client=c)
+                     for c, q in enumerate(self.resolve_client_quants()))
+
+
+# ---------------------------------------------------------------------------
+# per-client quantizer calibration state
+# ---------------------------------------------------------------------------
+
+def init_wire_calib() -> Dict[str, jnp.ndarray]:
+    """Per-link codec calibration state: EMAs of the activation statistics
+    the wire codecs derive their scales from (RD-FSQ: mu/sigma and the
+    clipped min/max; NF-b: the per-block absmax is bounded by the same
+    range).  One state per (link, client); the hub keeps them isolated so
+    one client's distribution never leaks into another's codec."""
+    z = jnp.zeros((), jnp.float32)
+    return dict(mean=z, std=z, lo=z, hi=z, count=z)
+
+
+def update_wire_calib(calib: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                      decay: float = 0.9) -> Dict[str, jnp.ndarray]:
+    """EMA-update a calibration state with one activation batch.
+
+    The first update adopts the batch statistics outright (``count`` == 0)
+    so a fresh state is immediately usable instead of being dragged toward
+    its zero init; later updates blend with ``decay``.
+    """
+    xf = x.astype(jnp.float32)
+    batch = dict(mean=jnp.mean(xf), std=jnp.std(xf),
+                 lo=jnp.min(xf), hi=jnp.max(xf))
+    count = calib["count"]
+    out = {k: jnp.where(count > 0.0,
+                        decay * calib[k] + (1.0 - decay) * batch[k],
+                        batch[k])
+           for k in batch}
+    out["count"] = count + 1.0
+    return out
+
+
+def calib_scale_error(calib: Dict[str, jnp.ndarray],
+                      other: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Relative distance between two calibration states' ranges — the
+    isolation metric the hub tests assert on."""
+    span_a = calib["hi"] - calib["lo"]
+    span_b = other["hi"] - other["lo"]
+    return jnp.abs(span_a - span_b) / (jnp.maximum(
+        jnp.abs(span_a), jnp.abs(span_b)) + 1e-8)
+
+
+# ---------------------------------------------------------------------------
+# in-graph cotangent quantization (async hub backward wire)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def quantize_cotangent(cfg: QuantConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Identity forward; the cotangent is pushed through ``cfg``'s wire
+    codec (encode -> decode) on the way back.
+
+    The in-graph twin of ``quantized_ship``'s ``bwd_cfg`` path, for
+    schedulers whose client and server halves are co-located in one
+    program (the async hub simulator): the forward activation already
+    crossed via the STE roundtrip; this op makes the *gradient* traffic
+    take the quantized wire form too.
+    """
+    return x
+
+
+def _qc_fwd(cfg, x):
+    return x, None
+
+
+def _qc_bwd(cfg, _res, g):
+    if cfg is None or cfg.method == "identity":
+        return (g,)
+    g_hat = quantizers.decode(cfg, quantizers.encode(cfg, g))
+    return (g_hat.astype(g.dtype),)
+
+
+quantize_cotangent.defvjp(_qc_fwd, _qc_bwd)
 
 
 def wire_payload(cfg: SplitConfig, params: Optional[Dict], x: jnp.ndarray,

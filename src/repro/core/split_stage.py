@@ -1,0 +1,170 @@
+"""Stage programs — what ONE split partition computes (layer 1 of 3).
+
+The split stack is decomposed into three reusable layers:
+
+  1. **stage programs** (this module): embed / body / head segments built
+     on the ``repro.models.stack`` executor, with stage-stacked parameter
+     trees and shard_map specs.  These used to live as closures inside
+     ``launch/split_pipeline.build_pipeline_step``; extracting them lets
+     the chain pipeline and the many-client hub share one definition of
+     "what a partition computes".
+  2. **wire links** (``repro.core.split.WireLink``): how activations and
+     cotangents cross between stages, with per-link quantization and
+     static byte accounting.
+  3. **schedulers** (``repro.launch.schedules``): who ticks when —
+     lockstep GPipe fill/drain, the N-client hub, and the
+     staleness-tolerant async mode.
+
+A stage program is deliberately *not* a stateful object: inside the SPMD
+``shard_map`` programs every pod executes the same code and branches on
+its stage index at runtime, so the useful unit is a set of pure segment
+functions (:func:`embed_tokens`, :func:`run_blocks`, :func:`head_ce`)
+plus the :class:`StageProgram` record describing which segments a given
+partition owns (used for introspection, per-stage param counts and the
+README topology tables).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import stack as stack_mod
+from repro.models import transformer as tf
+from repro.models.layers import embedding as emb_mod
+from repro.models.layers.norms import rms_norm
+from repro.train.losses import cross_entropy
+
+
+@dataclasses.dataclass(frozen=True)
+class StageProgram:
+    """One partition of the split topology.
+
+    ``first`` stages own the token embedding (they consume tokens);
+    ``last`` stages own the final norm + head (they emit the CE loss);
+    every stage owns ``per_stage`` transformer blocks.  The hub's shared
+    server stage is a ``last`` (but not ``first``) program executed once
+    for N clients' microbatches.
+    """
+
+    index: int
+    n_stages: int
+    per_stage: int
+    first: bool
+    last: bool
+
+    @property
+    def name(self) -> str:
+        kind = ("client" if self.first else
+                "server" if self.last else "mid")
+        return f"stage{self.index}/{kind}"
+
+
+def chain_programs(cfg: ArchConfig, n_stages: int) -> Tuple[StageProgram, ...]:
+    """The linear pipeline: stage s runs layers [s*L/N, (s+1)*L/N)."""
+    assert cfg.n_layers % n_stages == 0, (cfg.n_layers, n_stages)
+    per = cfg.n_layers // n_stages
+    return tuple(StageProgram(index=s, n_stages=n_stages, per_stage=per,
+                              first=(s == 0), last=(s == n_stages - 1))
+                 for s in range(n_stages))
+
+
+def hub_programs(cfg: ArchConfig, n_clients: int) -> Tuple[StageProgram, ...]:
+    """The star topology: N client stages (embed + bottom half) feeding one
+    shared server stage (top half + head)."""
+    assert cfg.n_layers % 2 == 0, cfg.n_layers
+    per = cfg.n_layers // 2
+    clients = tuple(StageProgram(index=c, n_stages=n_clients + 1,
+                                 per_stage=per, first=True, last=False)
+                    for c in range(n_clients))
+    server = StageProgram(index=n_clients, n_stages=n_clients + 1,
+                          per_stage=per, first=False, last=True)
+    return clients + (server,)
+
+
+# ---------------------------------------------------------------------------
+# segment functions (the closures formerly inside build_pipeline_step)
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg: ArchConfig, params: Dict, tokens: jnp.ndarray,
+                 dtype=None) -> jnp.ndarray:
+    """First-stage input segment: token ids -> (..., S, D) activations."""
+    return emb_mod.embed(params["embed"], tokens,
+                         dtype if dtype is not None else tf.cdtype(cfg))
+
+
+def run_blocks(cfg: ArchConfig, blocks: Dict, x: jnp.ndarray,
+               positions: jnp.ndarray) -> jnp.ndarray:
+    """Body segment: run a layer-stacked block tree through the unified
+    stack executor (same remat policy as the monolithic forward)."""
+    def body(h, p):
+        h, _, _ = tf.block_forward(cfg, "dense", p, h,
+                                   positions=positions, window=None)
+        return h, ({}, None)
+
+    x, _, _ = stack_mod.run_stack(body, x, blocks, remat=cfg.remat,
+                                  remat_group=cfg.remat_group)
+    return x
+
+
+def head_ce(cfg: ArchConfig, params: Dict, h: jnp.ndarray,
+            labels: jnp.ndarray) -> jnp.ndarray:
+    """Last-stage output segment: final norm + vocab head + masked CE."""
+    out = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = emb_mod.head_logits(params["head"], out)
+    return cross_entropy(logits, labels)
+
+
+# ---------------------------------------------------------------------------
+# stage-stacked parameters + shard_map specs
+# ---------------------------------------------------------------------------
+
+def init_stage_params(key, cfg: ArchConfig, n_stages: int,
+                      per_stage: Optional[int] = None) -> Dict:
+    """Stage-stacked parameters: blocks (n_stages, per_stage, ...).
+
+    Embed / head / final norm are shared (replicated): in the chain
+    topology only the first / last stage reads them; in the hub every
+    client embeds with the shared table.  ``per_stage`` defaults to
+    ``n_layers // n_stages`` (the chain); the hub passes
+    ``n_layers // 2`` with ``n_stages = n_clients + 1`` stacked stage
+    trees (N client halves + 1 server half).
+    """
+    if per_stage is None:
+        assert cfg.n_layers % n_stages == 0, (cfg.n_layers, n_stages)
+        per_stage = cfg.n_layers // n_stages
+    k1, k2, k3, _ = jax.random.split(key, 4)
+    lkeys = jax.random.split(k1, n_stages * per_stage).reshape(
+        n_stages, per_stage, -1)
+    blocks = jax.vmap(jax.vmap(
+        lambda k: tf.init_block_params(k, cfg, "dense")))(lkeys)
+    return dict(
+        embed=emb_mod.init_embedding(k2, cfg.vocab_size, cfg.d_model,
+                                     tf.pdtype(cfg)),
+        head=emb_mod.init_head(k3, cfg.d_model, cfg.vocab_size,
+                               dtype=tf.pdtype(cfg)),
+        final_norm=jnp.ones((cfg.d_model,), tf.pdtype(cfg)),
+        blocks=blocks,
+    )
+
+
+def stage_param_specs(cfg: ArchConfig, n_stages: int,
+                      per_stage: Optional[int] = None,
+                      axis: str = "pod") -> Dict:
+    """shard_map in_specs: block stacks sharded over the stage axis,
+    shared embed/head/norm replicated."""
+    blocks_spec = jax.tree_util.tree_map(
+        lambda _: P(axis), jax.eval_shape(
+            lambda: init_stage_params(jax.random.PRNGKey(0), cfg, n_stages,
+                                      per_stage)
+        )["blocks"])
+    return dict(
+        embed=jax.tree_util.tree_map(lambda _: P(), dict(emb=0)),
+        head=jax.tree_util.tree_map(lambda _: P(), dict(w=0)),
+        final_norm=P(),
+        blocks=blocks_spec,
+    )

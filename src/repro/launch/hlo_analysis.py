@@ -164,6 +164,114 @@ def _build_shape_map(comps: Dict[str, List[str]]) -> Dict[str, str]:
     return out
 
 
+def _call_edges(comps: Dict[str, List[str]]):
+    """Call-graph edges and conditional-branch groups of an HLO module.
+
+    Returns ``(edges, cond_groups)``: ``edges[name]`` is a list of
+    ``(child, multiplier, counts_bytes)`` — loop bodies/conditions carry
+    their trip count, fusion/call bodies multiplier 1 (their interior ops
+    do not write HBM, hence ``counts_bytes=False``); ``cond_groups[name]``
+    lists the branch-computation groups of each ``conditional`` (exactly
+    one branch runs per execution).
+    """
+    edges: Dict[str, List[Tuple[str, int, bool]]] = defaultdict(list)
+    cond_groups: Dict[str, List[List[str]]] = defaultdict(list)
+    for name, lines in comps.items():
+        for line in lines:
+            m_while = _WHILE_RE.search(line)
+            if m_while:
+                cond, body = m_while.groups()
+                # XLA annotates resolved loops with known_trip_count in
+                # the while's backend_config; fall back to the largest
+                # integer constant in the condition computation.
+                m_bc = _TRIP_BC_RE.search(line)
+                trips = int(m_bc.group(1)) if m_bc else \
+                    _trip_count(comps.get(cond, []))
+                edges[name].append((body, trips, True))
+                edges[name].append((cond, trips, True))
+            m_tf = _COND_TF_RE.search(line)
+            if m_tf:
+                cond_groups[name].append([m_tf.group(1), m_tf.group(2)])
+            else:
+                m_br = _COND_BR_RE.search(line)
+                if m_br:
+                    cond_groups[name].append(
+                        [b.strip().lstrip("%")
+                         for b in m_br.group(1).split(",") if b.strip()])
+        text = "\n".join(lines)
+        for child in _CALL_RE.findall(text):
+            edges[name].append((child, 1, False))
+        for child in _CALLS_RE.findall(text):
+            if child not in [c for c, _, _ in edges[name]]:
+                edges[name].append((child, 1, False))
+    return edges, cond_groups
+
+
+_CP_PAIRS_RE = re.compile(
+    r"source_target_pairs=\{(\{\d+,\d+\}(?:,\{\d+,\d+\})*)\}")
+_PAIR_RE = re.compile(r"\{(\d+),(\d+)\}")
+
+
+def collective_permute_pairs(hlo: str) -> Dict[Tuple[int, int], int]:
+    """Loop-aware collective-permute bytes per directed DEVICE pair.
+
+    ``analyze()['collective_by_op']`` charges the whole module with every
+    collective-permute instruction's full result bytes — the right number
+    for "what does the SPMD program execute per chip", but an overcount of
+    what any single link actually carries: a device appearing in none of
+    an instruction's ``source_target_pairs`` transmits nothing for it.
+    This walk attributes each instruction's result bytes (x loop trips) to
+    each of its (src, dst) pairs individually, so callers can aggregate
+    true per-link traffic (``repro.launch.split_hub.hlo_link_bytes`` maps
+    device ids back to pod stages via the mesh).
+    """
+    comps, entry = split_computations(hlo)
+    per_comp: Dict[str, List[Tuple[List[Tuple[int, int]], int]]] = {}
+    for name, lines in comps.items():
+        items = []
+        for line in lines:
+            m = _RESULT_RE.match(line.strip())
+            if not m:
+                continue
+            rhs = m.group(2)
+            if not re.search(r"\bcollective-permute(?:-start)?\(", rhs):
+                continue
+            _, out_b = _shape_elems_bytes(rhs.split("(")[0])
+            pm = _CP_PAIRS_RE.search(rhs)
+            if not pm:
+                continue
+            pairs = [(int(a), int(b)) for a, b in
+                     _PAIR_RE.findall(pm.group(1))]
+            items.append((pairs, out_b))
+        if items:
+            per_comp[name] = items
+
+    edges, cond_groups = _call_edges(comps)
+    out: Dict[Tuple[int, int], int] = defaultdict(int)
+    visiting = set()
+
+    def walk(name: str, mult: int) -> None:
+        if name not in comps or name in visiting or mult <= 0:
+            return
+        visiting.add(name)
+        for pairs, b in per_comp.get(name, []):
+            for p in pairs:
+                out[p] += b * mult
+        for child, m, _cb in edges.get(name, []):
+            walk(child, mult * m)
+        # a conditional runs one branch per execution; a ship op lives in
+        # at most one branch in our programs, so charging each branch at
+        # the parent multiplier attributes it correctly
+        for branches in cond_groups.get(name, []):
+            for br in branches:
+                walk(br, mult)
+        visiting.discard(name)
+
+    if entry:
+        walk(entry, 1)
+    return dict(out)
+
+
 def analyze(hlo: str) -> Dict:
     """Loop-aware per-device totals: dot FLOPs, output bytes, collectives."""
     comps, entry = split_computations(hlo)
@@ -196,43 +304,12 @@ def analyze(hlo: str) -> Dict:
                     break
         per_comp[name] = (flops, bytes_out, dict(coll), dict(coll_counts))
 
-    # call-graph edges: (child, multiplier, counts_bytes).  Loop bodies are
-    # real executions (count everything x trips); fusion/call bodies only
-    # contribute FLOPs/collectives — their interior elementwise ops do not
-    # write HBM (the fusion instruction's own output already counted).
-    # conditional( branches are NOT plain edges: exactly one branch runs
-    # per execution, so each conditional contributes the elementwise MAX
-    # over its branch subtrees, once — not the sum ("always-taken").
-    edges: Dict[str, List[Tuple[str, int, bool]]] = defaultdict(list)
-    cond_groups: Dict[str, List[List[str]]] = defaultdict(list)
-    for name, lines in comps.items():
-        for line in lines:
-            m_while = _WHILE_RE.search(line)
-            if m_while:
-                cond, body = m_while.groups()
-                # XLA annotates resolved loops with known_trip_count in
-                # the while's backend_config; fall back to the largest
-                # integer constant in the condition computation.
-                m_bc = _TRIP_BC_RE.search(line)
-                trips = int(m_bc.group(1)) if m_bc else \
-                    _trip_count(comps.get(cond, []))
-                edges[name].append((body, trips, True))
-                edges[name].append((cond, trips, True))
-            m_tf = _COND_TF_RE.search(line)
-            if m_tf:
-                cond_groups[name].append([m_tf.group(1), m_tf.group(2)])
-            else:
-                m_br = _COND_BR_RE.search(line)
-                if m_br:
-                    cond_groups[name].append(
-                        [b.strip().lstrip("%")
-                         for b in m_br.group(1).split(",") if b.strip()])
-        text = "\n".join(lines)
-        for child in _CALL_RE.findall(text):
-            edges[name].append((child, 1, False))
-        for child in _CALLS_RE.findall(text):
-            if child not in [c for c, _, _ in edges[name]]:
-                edges[name].append((child, 1, False))
+    # call-graph edges: (child, multiplier, counts_bytes) — see
+    # _call_edges.  conditional( branches are NOT plain edges: exactly one
+    # branch runs per execution, so each conditional contributes the
+    # elementwise MAX over its branch subtrees, once — not the sum
+    # ("always-taken").
+    edges, cond_groups = _call_edges(comps)
 
     def _zero():
         return dict(flops=0.0, bytes=0, coll=defaultdict(int),

@@ -8,24 +8,28 @@ streams microbatches GPipe-style.  For the paper's 2-partition case:
   pod 0 (client): embed + layers[:L/2] -> quantize -> pack -> ppermute
   pod 1 (server): dequantize -> layers[L/2:] -> head -> next-token CE
 
-Generalized here to ``SplitConfig.n_stages`` equal partitions (the paper's
-deployment is N=2): stage s runs layers [s*L/N, (s+1)*L/N); every cut
-s -> s+1 is a quantized wire, optionally with a per-cut ``QuantConfig``
-(``SplitConfig.stage_quants``).  All pods execute the same SPMD program —
-a ``lax.scan`` over ``n_micro + n_stages - 1`` microbatch ticks: the first
-``n_stages - 1`` ticks fill the pipeline, the last ``n_stages - 1`` drain
-it, and every stage stays busy in between.  Labels travel with the
-tokens; the last stage computes the next-token cross-entropy, so
-``build_pipeline_grad_step`` really trains — gradients return across the
-(optionally quantized, BEYOND-PAPER) backward wire — and
-``train_pipeline`` runs AdamW on the accumulated microbatch gradients.
+This module is now a thin composition of the three split-stack layers
+(the monolith it used to be was refactored apart, ROADMAP item 2):
 
-The wire is ``core.split.quantized_ship``: the collective-permute moves
-the *bit-packed uint8 codes + fp16 scales*, so the ICI traffic shrinks by
-~16/bits vs shipping bf16.  Payload shapes are static, so the per-tick
-wire bytes returned by the step functions are compile-time constants —
-the __main__ dry-run asserts them against the collective-permute bytes
-measured from the lowered HLO (within 1%).
+  * stage programs — ``repro.core.split_stage`` (what a partition runs)
+  * wire links     — ``repro.core.split.WireLink`` (how cuts ship)
+  * schedulers     — ``repro.launch.schedules`` (who ticks when)
+
+The public API is unchanged: ``build_pipeline_step`` /
+``build_pipeline_grad_step`` build the N-stage lockstep GPipe schedule
+(``SplitConfig.n_stages`` equal partitions, per-cut ``stage_quants``),
+``train_pipeline`` runs AdamW over it, and the __main__ dry-run asserts
+the static wire accounting against the lowered HLO.  The paper's
+2-partition case is also exactly ``launch/split_hub.py`` with one
+client (loss parity is tested to 3e-6).
+
+``pipeline_wire_bytes`` now reports PER-LINK bytes (each link counted
+once, on the devices that execute it) instead of summing one payload
+per distinct cut config over every device — the SPMD accounting fix
+for heterogeneous ``stage_quants``.  Accordingly the dry-run asserts
+each link's bytes against the HLO collective-permute traffic of that
+link's device pairs (``hlo_analysis.collective_permute_pairs``), which
+also lets it cover mixed 2-bit/4-bit topologies.
 
 Run the dry-run (512 fake devices, multi-pod mesh):
     PYTHONPATH=src python -m repro.launch.split_pipeline
@@ -42,26 +46,19 @@ if __name__ == "__main__":  # must run before any jax import
 
 # ruff: noqa: E402
 import dataclasses
-import math
-from functools import partial
+import functools
 from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.configs.base import ArchConfig
-from repro.core import quantizers
 from repro.core.quantizers import QuantConfig
-from repro.core.split import SplitConfig, quantized_ship
-from repro.models import stack as stack_mod
-from repro.models import transformer as tf
-from repro.models.layers import embedding as emb_mod
-from repro.models.layers.norms import rms_norm
+from repro.core.split import SplitConfig
+from repro.core.split_stage import init_stage_params, stage_param_specs
+from repro.launch import schedules
 from repro.optim import AdamWConfig, init_opt_state
-from repro.train.losses import IGNORE, cross_entropy
 
 
 def _as_split(q) -> SplitConfig:
@@ -90,92 +87,35 @@ def _homogeneous_cfg(arch: str = "llama3_2_3b", reduced: bool = False,
 
 def init_pipeline_params(key, cfg: ArchConfig, n_stages: int = 2) -> Dict:
     """Stage-stacked parameters: blocks (N, L/N, ...); embed/head shared."""
-    per_stage = cfg.n_layers // n_stages
-    k1, k2, k3, k4 = jax.random.split(key, 4)
-    lkeys = jax.random.split(k1, n_stages * per_stage).reshape(
-        n_stages, per_stage, -1)
-    blocks = jax.vmap(jax.vmap(
-        lambda k: tf.init_block_params(k, cfg, "dense")))(lkeys)
-    return dict(
-        embed=emb_mod.init_embedding(k2, cfg.vocab_size, cfg.d_model,
-                                     tf.pdtype(cfg)),
-        head=emb_mod.init_head(k3, cfg.d_model, cfg.vocab_size,
-                               dtype=tf.pdtype(cfg)),
-        final_norm=jnp.ones((cfg.d_model,), tf.pdtype(cfg)),
-        blocks=blocks,
-    )
+    return init_stage_params(key, cfg, n_stages)
 
 
 def pipeline_specs(cfg: ArchConfig, n_stages: int = 2) -> Dict:
     """shard_map in_specs for the parameter tree."""
-    blocks_spec = jax.tree_util.tree_map(
-        lambda _: P("pod"), jax.eval_shape(
-            lambda: init_pipeline_params(jax.random.PRNGKey(0), cfg,
-                                         n_stages)
-        )["blocks"])
-    return dict(
-        embed=jax.tree_util.tree_map(lambda _: P(), dict(emb=0)),
-        head=jax.tree_util.tree_map(lambda _: P(), dict(w=0)),
-        final_norm=P(),
-        blocks=blocks_spec,
-    )
-
-
-# ---------------------------------------------------------------------------
-# static wire accounting
-# ---------------------------------------------------------------------------
-
-def _cut_groups(quants: Tuple[QuantConfig, ...]
-                ) -> List[Tuple[QuantConfig, Tuple[int, ...]]]:
-    """Cuts grouped by identical QuantConfig (one ship op per group)."""
-    groups: List[Tuple[QuantConfig, Tuple[int, ...]]] = []
-    for c, q in enumerate(quants):
-        for i, (gq, cuts) in enumerate(groups):
-            if gq == q:
-                groups[i] = (gq, cuts + (c,))
-                break
-        else:
-            groups.append((q, (c,)))
-    return groups
+    return stage_param_specs(cfg, n_stages)
 
 
 def pipeline_wire_bytes(cfg: ArchConfig, split, micro_batch: int, seq: int,
                         bwd_qcfg: Optional[QuantConfig] = None,
                         data_shards: int = 1) -> Dict:
-    """Per-tick, per-device wire bytes, from the static payload shapes.
+    """Per-link static wire bytes of the pipeline, from payload shapes.
 
     ``data_shards`` is the mesh's data-axis size: the microbatch is
     sharded over it, so each device encodes and ships a
-    ``micro_batch / data_shards`` slice — the quantity the partitioned
-    HLO's collective-permute bytes measure.  Every device executes every
-    cut group's ship op (SPMD), so the per-device bytes per tick are the
-    SUM over distinct cut configs of that group's payload — for the
-    homogeneous (single-config) topology this is exactly one payload.
-    ``bwd_tick`` is the gradient-return wire crossed once per tick by
-    the backward scan of the grad step (0 for the forward-only step).
+    ``micro_batch / data_shards`` slice.  Returns the
+    ``schedules.chain_wire_bytes`` table: ``links[(src, dst)]`` is each
+    cut's FULL per-tick traffic (slice x data shards — the quantity the
+    dry-run asserts against the HLO collective-permute bytes of that
+    link's device pairs); ``fwd_tick`` / ``bwd_tick`` are the per-device
+    per-tick bytes — the MAX over links of the device's payload slice,
+    since a device sources at most one cut per tick.  The old sum over
+    distinct cut configs charged every device with every cut's payload,
+    overcounting heterogeneous ``stage_quants`` topologies.
     """
-    split = _as_split(split)
-    assert micro_batch % data_shards == 0, (micro_batch, data_shards)
-    x_sds = jax.ShapeDtypeStruct(
-        (micro_batch // data_shards, seq, cfg.d_model), tf.cdtype(cfg))
-    fwd = 0
-    groups = _cut_groups(split.resolve_stage_quants())
-    for qcfg, _cuts in groups:
-        payload = jax.eval_shape(partial(quantizers.encode, qcfg), x_sds)
-        fwd += payload.wire_bytes()
-    if bwd_qcfg is None:
-        # paper scope: the cotangent returns uncompressed, once per group
-        bwd = len(groups) * math.prod(x_sds.shape) * x_sds.dtype.itemsize
-    else:
-        payload = jax.eval_shape(partial(quantizers.encode, bwd_qcfg),
-                                 x_sds)
-        bwd = len(groups) * payload.wire_bytes()
-    return dict(fwd_tick=fwd, bwd_tick=bwd)
+    return schedules.chain_wire_bytes(cfg, _as_split(split), micro_batch,
+                                      seq, bwd_qcfg,
+                                      data_shards=data_shards)
 
-
-# ---------------------------------------------------------------------------
-# pipeline step builders
-# ---------------------------------------------------------------------------
 
 def build_pipeline_step(cfg: ArchConfig, mesh, split, n_micro: int,
                         micro_batch: int, seq: int,
@@ -184,96 +124,13 @@ def build_pipeline_step(cfg: ArchConfig, mesh, split, n_micro: int,
 
     ``tokens``/``labels`` are (n_micro, B, S) int32; ``loss`` is the
     next-token cross-entropy computed by the last stage, averaged over
-    the ``n_micro`` microbatches; ``wire_bytes`` is the per-tick forward
-    wire payload in bytes — a compile-time constant derived from the
-    static ``CommPayload`` shapes (NOT a measured quantity; the dry-run
-    asserts it against the lowered HLO's collective-permute bytes).
+    the ``n_micro`` microbatches; ``wire_bytes`` is the per-device
+    per-tick forward wire payload in bytes — a compile-time constant
+    derived from the static ``CommPayload`` shapes (NOT a measured
+    quantity; the dry-run asserts it against the lowered HLO).
     """
-    split = _as_split(split)
-    n_stages = split.n_stages
-    assert cfg.n_layers % n_stages == 0
-    assert mesh.shape["pod"] == n_stages, \
-        f"mesh pod axis {mesh.shape['pod']} != n_stages {n_stages}"
-    dtype = tf.cdtype(cfg)
-    groups = _cut_groups(split.resolve_stage_quants())
-    wire = pipeline_wire_bytes(cfg, split, micro_batch, seq, bwd_qcfg,
-                               data_shards=mesh.shape["data"])
-    last = n_stages - 1
-
-    param_specs = pipeline_specs(cfg, n_stages)
-    tok_spec = P(None, "data", None)  # (n_micro, B, S)
-
-    @partial(shard_map, mesh=mesh,
-             in_specs=(param_specs, tok_spec, tok_spec),
-             out_specs=(P(), P()),
-             check_rep=False)
-    def step(params, tokens, labels):
-        stage = jax.lax.axis_index("pod")
-        my_blocks = jax.tree_util.tree_map(lambda a: a[0],
-                                           params["blocks"])
-        positions = jnp.arange(seq, dtype=jnp.int32)
-
-        def run_stage(x):
-            def body(h, p):
-                h, _, _ = tf.block_forward(cfg, "dense", p, h,
-                                           positions=positions, window=None)
-                return h, ({}, None)
-
-            x, _, _ = stack_mod.run_stack(body, x, my_blocks,
-                                          remat=cfg.remat,
-                                          remat_group=cfg.remat_group)
-            return x
-
-        def tick(carry, xs):
-            recv = carry  # activation received on the previous tick
-            tok, lab = xs
-            x_emb = emb_mod.embed(params["embed"], tok, dtype)
-            x_in = jnp.where(stage == 0, x_emb, recv.astype(x_emb.dtype))
-            h = run_stage(x_in)
-            # ship across every cut; a stage keeps the payload arriving
-            # from its own upstream cut (cut c feeds stage c+1)
-            recv_new = jnp.zeros_like(h)
-            for qcfg, cuts in groups:
-                perm = tuple((c, c + 1) for c in cuts)
-                out_q = quantized_ship(qcfg, h, "pod", perm, bwd_qcfg)
-                is_dst = jnp.zeros((), jnp.bool_)
-                for c in cuts:
-                    is_dst = is_dst | (stage == c + 1)
-                recv_new = jnp.where(is_dst, out_q.astype(h.dtype),
-                                     recv_new)
-            # last-stage head + next-token CE on this tick's microbatch.
-            # lax.cond, not a computed-then-masked jnp.where: the vocab
-            # projection is the widest matmul in the model and only 1/N
-            # of the stages needs it — the branch keeps the SPMD program
-            # identical while sparing the other stages the work.
-            def head_ce(hh):
-                out = rms_norm(hh, params["final_norm"], cfg.norm_eps)
-                logits = emb_mod.head_logits(params["head"], out)
-                return cross_entropy(logits, lab)
-
-            ce = jax.lax.cond(stage == last, head_ce,
-                              lambda hh: jnp.zeros((), jnp.float32), h)
-            return recv_new, ce
-
-        # GPipe fill/drain: microbatch j enters stage 0 at tick j and
-        # reaches the last stage at tick j + (n_stages - 1), so the scan
-        # runs n_micro + n_stages - 1 ticks; stage 0 consumes dummy
-        # tokens while draining and the last stage sees IGNORE labels
-        # while filling (masked to CE = 0 by cross_entropy).
-        pad_tok = jnp.zeros((last,) + tokens.shape[1:], tokens.dtype)
-        tok_feed = jnp.concatenate([tokens, pad_tok], axis=0)
-        pad_lab = jnp.full((last,) + labels.shape[1:], IGNORE, labels.dtype)
-        lab_feed = jnp.concatenate([pad_lab, labels], axis=0)
-
-        init = jnp.zeros((tokens.shape[1], seq, cfg.d_model), dtype)
-        _, ces = jax.lax.scan(tick, init, (tok_feed, lab_feed))
-        # sum over pod (only the last stage contributes), mean over the
-        # data shards (each computed CE on its local microbatch slice)
-        loss = jax.lax.pmean(jax.lax.psum(jnp.sum(ces), "pod"),
-                             "data") / n_micro
-        return loss, jnp.asarray(wire["fwd_tick"], jnp.float32)
-
-    return step
+    return schedules.build_gpipe_step(cfg, mesh, _as_split(split), n_micro,
+                                      micro_batch, seq, bwd_qcfg=bwd_qcfg)
 
 
 def build_pipeline_grad_step(cfg, mesh, split, bwd_qcfg, n_micro,
@@ -282,25 +139,43 @@ def build_pipeline_grad_step(cfg, mesh, split, bwd_qcfg, n_micro,
     the stage parameters, exercising the gradient-return wire.
 
     Returns fn(params, tokens, labels) -> (loss, grads, wire_bytes) with
-    ``wire_bytes`` the per-tick forward + backward payload (compile-time
-    constant, same contract as build_pipeline_step).
+    ``wire_bytes`` the per-device per-tick forward + backward payload
+    (compile-time constant, same contract as build_pipeline_step).
     """
-    split = _as_split(split)
-    step = build_pipeline_step(cfg, mesh, split, n_micro, micro_batch, seq,
-                               bwd_qcfg=bwd_qcfg)
-    wire = pipeline_wire_bytes(cfg, split, micro_batch, seq, bwd_qcfg,
-                               data_shards=mesh.shape["data"])
-    tick_bytes = float(wire["fwd_tick"] + wire["bwd_tick"])
+    return schedules.build_gpipe_grad_step(cfg, mesh, _as_split(split),
+                                           bwd_qcfg, n_micro, micro_batch,
+                                           seq)
 
-    def grad_step(params, tokens, labels):
-        def loss_fn(p):
-            loss, _ = step(p, tokens, labels)
-            return loss
 
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        return loss, grads, jnp.asarray(tick_bytes, jnp.float32)
+@functools.lru_cache(maxsize=16)
+def _cached_pipeline_update(cfg: ArchConfig, mesh, split: SplitConfig,
+                            bwd_qcfg: Optional[QuantConfig],
+                            opt_cfg: AdamWConfig, n_micro: int,
+                            micro_batch: int, seq: int, warmup_steps: int,
+                            total_steps: int):
+    """One jitted (grad step + AdamW apply) per pipeline configuration.
 
-    return grad_step
+    Same pattern as ``serve/decode._compiled_serve_step``: every config
+    in the key is a frozen (hashable) dataclass and ``jax.Mesh`` hashes
+    by value, so repeated ``train_pipeline`` calls — resumed runs, sweep
+    loops — reuse one traced update instead of rebuilding the shard_map
+    closure and re-jitting per call (the recompile cost noted in ROADMAP
+    item 1).
+    """
+    from repro.train.loop import apply_gradients
+
+    grad_step = build_pipeline_grad_step(cfg, mesh, split, bwd_qcfg,
+                                         n_micro, micro_batch, seq)
+
+    @jax.jit
+    def update(state, tokens, labels):
+        loss, grads, wire_b = grad_step(state.params, tokens, labels)
+        state, _ = apply_gradients(state, grads, opt_cfg,
+                                   warmup_steps=warmup_steps,
+                                   total_steps=total_steps)
+        return state, loss, wire_b
+
+    return update
 
 
 def train_pipeline(cfg: ArchConfig, mesh, split, opt_cfg: AdamWConfig,
@@ -318,27 +193,21 @@ def train_pipeline(cfg: ArchConfig, mesh, split, opt_cfg: AdamWConfig,
     (the per-tick CE terms sum into one loss before differentiation).
     The update is ``train.loop.apply_gradients`` — the same scheduled
     AdamW the monolithic trainer uses (``total_steps == 0`` = constant
-    lr).  Returns (params, opt_state, per-step losses, wire bytes/tick).
+    lr) — compiled once per configuration via the lru cache above.
+    Returns (params, opt_state, per-step losses, wire bytes/tick).
     """
-    from repro.train.loop import TrainState, apply_gradients
+    from repro.train.loop import TrainState
 
     split = _as_split(split)
-    grad_step = build_pipeline_grad_step(cfg, mesh, split, bwd_qcfg,
-                                         n_micro, micro_batch, seq)
+    update = _cached_pipeline_update(cfg, mesh, split, bwd_qcfg, opt_cfg,
+                                     n_micro, micro_batch, seq,
+                                     warmup_steps, total_steps)
     if params is None:
         params = init_pipeline_params(jax.random.PRNGKey(seed), cfg,
                                       split.n_stages)
     state = TrainState(params=params,
                        opt=init_opt_state(params, opt_cfg),
                        step=jnp.zeros((), jnp.int32))
-
-    @jax.jit
-    def update(state, tokens, labels):
-        loss, grads, wire_b = grad_step(state.params, tokens, labels)
-        state, _ = apply_gradients(state, grads, opt_cfg,
-                                   warmup_steps=warmup_steps,
-                                   total_steps=total_steps)
-        return state, loss, wire_b
 
     history: List[float] = []
     wire_b = 0.0
@@ -368,16 +237,32 @@ def _micro_batch_sds(n_micro, micro_batch, seq):
     return tok, tok
 
 
-def _assert_wire_matches_hlo(name: str, cp_bytes: int, tick_bytes: int,
-                             n_ticks: int) -> None:
-    expected = tick_bytes * n_ticks
-    rel = abs(cp_bytes - expected) / max(expected, 1)
-    print(f"[split-pipeline {name}] wire accounting: HLO "
-          f"{cp_bytes / 2 ** 20:.3f} MiB vs static "
-          f"{expected / 2 ** 20:.3f} MiB (rel err {rel:.4f})")
-    assert rel < 0.01, (
-        f"{name}: HLO collective-permute bytes {cp_bytes} disagree with "
-        f"static CommPayload accounting {expected} (rel err {rel:.3f})")
+def assert_links_match_hlo(name: str, hlo_text: str, mesh, wire: Dict,
+                           n_ticks: int, check_bwd: bool = False) -> None:
+    """Per-link wire assertion: for every link the static CommPayload
+    bytes (x scan ticks) must match the HLO collective-permute bytes
+    attributed to that link's device pairs, within 1%.  ``check_bwd``
+    additionally asserts the gradient-return direction (dst -> src)."""
+    from repro.launch.hlo_analysis import collective_permute_pairs
+
+    by_link = schedules.pod_link_bytes(
+        collective_permute_pairs(hlo_text), mesh)
+    for (src, dst), entry in sorted(wire["links"].items()):
+        checks = [("fwd", (src, dst), entry["fwd"])]
+        if check_bwd:
+            checks.append(("bwd", (dst, src), entry["bwd"]))
+        for direction, key, per_tick in checks:
+            got = by_link.get(key, 0)
+            expected = per_tick * n_ticks
+            rel = abs(got - expected) / max(expected, 1)
+            print(f"[split-pipeline {name}] link {key[0]}->{key[1]} "
+                  f"({direction}, {entry['quant']}-{entry['bits']}bit): "
+                  f"HLO {got / 2 ** 20:.3f} MiB vs static "
+                  f"{expected / 2 ** 20:.3f} MiB (rel err {rel:.4f})")
+            assert rel < 0.01, (
+                f"{name} link {key}: HLO collective-permute bytes {got} "
+                f"disagree with static accounting {expected} "
+                f"(rel err {rel:.3f})")
 
 
 def dryrun(arch: str = "llama3_2_3b", n_micro: int = 4,
@@ -385,8 +270,8 @@ def dryrun(arch: str = "llama3_2_3b", n_micro: int = 4,
            bits_list=(16, 4, 2), n_stages: int = 2,
            reduced: bool = False, smoke: bool = False) -> Dict:
     """Lower + compile the N-stage pipeline on the multi-pod mesh, measure
-    the collective-permute bytes per bit-width, and assert they match the
-    static CommPayload wire accounting."""
+    the collective-permute bytes per bit-width, and assert every link
+    matches the static CommPayload wire accounting."""
     from repro.launch.hlo_analysis import analyze
 
     mesh = _pipeline_mesh(n_stages, smoke=smoke)
@@ -407,15 +292,18 @@ def dryrun(arch: str = "llama3_2_3b", n_micro: int = 4,
         with mesh:
             compiled = jax.jit(step).lower(params_sds, tok_sds,
                                            lab_sds).compile()
-        hl = analyze(compiled.as_text())
+        hlo = compiled.as_text()
+        hl = analyze(hlo)
         cp = hl["collective_by_op"].get("collective-permute", 0)
         wire = pipeline_wire_bytes(cfg, split, micro_batch, seq,
                                    data_shards=mesh.shape["data"])
-        _assert_wire_matches_hlo(f"{arch} {method}-{bits}bit N={n_stages}",
-                                 cp, wire["fwd_tick"], n_ticks)
+        assert_links_match_hlo(f"{arch} {method}-{bits}bit N={n_stages}",
+                               hlo, mesh, wire, n_ticks)
         results[bits] = dict(
             collective_permute_bytes=cp,
             wire_bytes_per_tick=wire["fwd_tick"],
+            wire_links={f"{s}->{d}": v["fwd"]
+                        for (s, d), v in wire["links"].items()},
             total_collective_bytes=hl["collective_bytes"],
             peak_gib=compiled.memory_analysis().temp_size_in_bytes / 2 ** 30,
         )
@@ -429,6 +317,43 @@ def dryrun(arch: str = "llama3_2_3b", n_micro: int = 4,
               f"(paper claims 0.875)")
         results["reduction_2bit"] = r
     return results
+
+
+def dryrun_heterogeneous(arch: str = "llama3_2_3b", n_micro: int = 3,
+                         micro_batch: int = 4, seq: int = 16,
+                         smoke: bool = True) -> Dict:
+    """Mixed 2-bit/4-bit 4-stage topology with per-link HLO assertions.
+
+    The satellite the per-link refactor unlocks: the old per-device sum
+    could not be asserted against heterogeneous ``stage_quants`` (every
+    device was charged with every cut group's payload), so only
+    homogeneous configs were HLO-checked.  Each link now carries its own
+    quant config and its own assertion.
+    """
+    n_stages = 4
+    mesh = _pipeline_mesh(n_stages, smoke=smoke)
+    cfg = _homogeneous_cfg(arch, reduced=smoke, n_stages=n_stages)
+    quants = (QuantConfig(method="rdfsq", bits=2),
+              QuantConfig(method="nf", bits=4),
+              QuantConfig(method="rdfsq", bits=2))
+    split = SplitConfig(quant=quants[0], learnable_codec=False,
+                        n_stages=n_stages, stage_quants=quants)
+    params_sds = jax.eval_shape(
+        lambda: init_pipeline_params(jax.random.PRNGKey(0), cfg, n_stages))
+    tok_sds, lab_sds = _micro_batch_sds(n_micro, micro_batch, seq)
+    n_ticks = n_micro + n_stages - 1
+
+    step = build_pipeline_step(cfg, mesh, split, n_micro, micro_batch, seq)
+    with mesh:
+        compiled = jax.jit(step).lower(params_sds, tok_sds,
+                                       lab_sds).compile()
+    wire = pipeline_wire_bytes(cfg, split, micro_batch, seq,
+                               data_shards=mesh.shape["data"])
+    assert_links_match_hlo(f"{arch} mixed-2/4bit N={n_stages}",
+                           compiled.as_text(), mesh, wire, n_ticks)
+    return dict(wire_links={f"{s}->{d}": v["fwd"]
+                            for (s, d), v in wire["links"].items()},
+                wire_bytes_per_tick=wire["fwd_tick"])
 
 
 def dryrun_backward(arch: str = "llama3_2_3b", n_micro: int = 4,
@@ -461,13 +386,13 @@ def dryrun_backward(arch: str = "llama3_2_3b", n_micro: int = 4,
         with mesh:
             compiled = jax.jit(step).lower(params_sds, tok_sds,
                                            lab_sds).compile()
-        hl = analyze(compiled.as_text())
+        hlo = compiled.as_text()
+        hl = analyze(hlo)
         cp = hl["collective_by_op"].get("collective-permute", 0)
         wire = pipeline_wire_bytes(cfg, fwd_split, micro_batch, seq, bwd_q,
                                    data_shards=mesh.shape["data"])
-        _assert_wire_matches_hlo(f"train {name} N={n_stages}", cp,
-                                 wire["fwd_tick"] + wire["bwd_tick"],
-                                 n_ticks)
+        assert_links_match_hlo(f"train {name} N={n_stages}", hlo, mesh,
+                               wire, n_ticks, check_bwd=True)
         results[name] = cp
         print(f"[split-pipeline-train {name}] collective-permute/dev = "
               f"{cp / 2 ** 20:.2f} MiB")
@@ -520,10 +445,13 @@ def main(smoke: bool = False) -> Dict:
         cfg_kw = dict(reduced=True, smoke=True, n_stages=4,
                       n_micro=3, micro_batch=4, seq=16)
         out = dryrun(bits_list=(16, 2), **cfg_kw)
+        out["heterogeneous"] = dryrun_heterogeneous()
         out["train"] = dryrun_train(n_steps=4, n_micro=2, micro_batch=4,
                                     seq=32, n_stages=2)
         return out
     out = dryrun()
+    out["heterogeneous"] = dryrun_heterogeneous(smoke=False, n_micro=4,
+                                                micro_batch=32, seq=1024)
     out["backward"] = dryrun_backward()
     out["train"] = dryrun_train()
     return out

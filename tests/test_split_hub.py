@@ -1,0 +1,331 @@
+"""The stage/wire/scheduler decomposition and the many-client hub.
+
+In-process tests cover the wire-link layer (per-link byte accounting,
+grouping, cotangent quantization, per-client calibration) and the
+mesh-free async scheduler; the SPMD lockstep hub (real collective
+permutes, per-link HLO assertions, pipeline parity) runs in subprocesses
+on an 8-fake-device mesh, like tests/test_mesh_subprocess.py.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.quantizers import QuantConfig
+from repro.core import quantizers
+from repro.core.split import (HubConfig, SplitConfig, WireLink,
+                              calib_scale_error, group_links,
+                              init_wire_calib, pipeline_links,
+                              quantize_cotangent, update_wire_calib)
+from repro.core.split_stage import chain_programs, hub_programs
+from repro.launch import schedules
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, env=env,
+                          timeout=420)
+
+
+# ---------------------------------------------------------------------------
+# layer 1: stage programs
+# ---------------------------------------------------------------------------
+
+def test_stage_programs():
+    cfg = get_config("llama3_2_3b").reduced()  # 2 layers
+    chain = chain_programs(cfg, 2)
+    assert [p.name for p in chain] == ["stage0/client", "stage1/server"]
+    assert all(p.per_stage == 1 for p in chain)
+
+    hub = hub_programs(cfg, 3)
+    assert len(hub) == 4
+    assert all(p.first and not p.last for p in hub[:3])
+    assert hub[3].last and not hub[3].first
+    assert hub[3].index == 3
+
+
+# ---------------------------------------------------------------------------
+# layer 2: wire links
+# ---------------------------------------------------------------------------
+
+def test_wirelink_bytes_and_heterogeneous_accounting():
+    """Per-link bytes: each link counted once; the per-device tick load is
+    the MAX over links (a device sources one cut per tick), not the old
+    sum over distinct configs — the heterogeneous SPMD overcount."""
+    cfg = get_config("llama3_2_3b").reduced()
+    x = jax.ShapeDtypeStruct((4, 16, cfg.d_model), jnp.float32)
+    q2 = QuantConfig(method="rdfsq", bits=2)
+    q4 = QuantConfig(method="nf", bits=4)
+
+    link = WireLink(src=0, dst=1, quant=q2)
+    direct = jax.eval_shape(
+        lambda: quantizers.encode(q2, jnp.zeros(x.shape, x.dtype)))
+    assert link.fwd_wire_bytes(x) == direct.wire_bytes()
+    # paper scope: uncompressed cotangent
+    assert link.bwd_wire_bytes(x) == 4 * 16 * cfg.d_model * 4
+    qlink = WireLink(src=0, dst=1, quant=q2, bwd_quant=q4)
+    assert qlink.bwd_wire_bytes(x) < link.bwd_wire_bytes(x)
+
+    split = SplitConfig(quant=q2, n_stages=4, stage_quants=(q2, q4, q2),
+                        learnable_codec=False)
+    wire = schedules.chain_wire_bytes(cfg, split, 4, 16)
+    b2 = wire["links"][(0, 1)]["fwd"]
+    b4 = wire["links"][(1, 2)]["fwd"]
+    assert wire["links"][(2, 3)]["fwd"] == b2
+    assert b4 > b2
+    assert wire["fwd_tick"] == max(b2, b4)  # NOT b2 + b4 (the old sum)
+    assert wire["fwd_total"] == 2 * b2 + b4
+
+
+def test_pipeline_links_and_grouping():
+    q2 = QuantConfig(method="rdfsq", bits=2)
+    q4 = QuantConfig(method="nf", bits=4)
+    split = SplitConfig(quant=q2, n_stages=4, stage_quants=(q2, q4, q2),
+                        learnable_codec=False)
+    links = pipeline_links(split)
+    assert [(k.src, k.dst) for k in links] == [(0, 1), (1, 2), (2, 3)]
+    groups = group_links(links)
+    assert len(groups) == 2  # q2 cuts share one collective, q4 its own
+    assert [(k.src, k.dst) for k in groups[0][2]] == [(0, 1), (2, 3)]
+
+    hub = HubConfig(n_clients=3, quant=q2, client_quants=(q2, q4, q2))
+    hlinks = hub.links()
+    assert [(k.src, k.dst, k.client) for k in hlinks] == \
+        [(0, 3, 0), (1, 3, 1), (2, 3, 2)]
+
+
+def test_hub_config_validation():
+    with pytest.raises(ValueError):
+        HubConfig(n_clients=2, client_quants=(QuantConfig(),)).links()
+    with pytest.raises(ValueError):
+        HubConfig(n_clients=2, tick_rates=(1, 0)).resolve_tick_rates()
+    with pytest.raises(ValueError):
+        HubConfig(n_clients=2, tick_rates=(1,)).resolve_tick_rates()
+    assert HubConfig(n_clients=3).resolve_tick_rates() == (1, 1, 1)
+
+
+def test_quantize_cotangent():
+    """Identity forward; the backward pushes the cotangent through the
+    wire codec, exactly matching an explicit encode->decode roundtrip."""
+    q = QuantConfig(method="rdfsq", bits=2)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 32))
+    y, vjp = jax.vjp(lambda v: quantize_cotangent(q, v), x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+    g = jax.random.normal(jax.random.PRNGKey(1), (4, 32))
+    (got,) = vjp(g)
+    ref = quantizers.decode(q, quantizers.encode(q, g))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-6)
+    # identity config: cotangent passes through untouched
+    (ident,) = jax.vjp(lambda v: quantize_cotangent(
+        QuantConfig(method="identity"), v), x)[1](g)
+    np.testing.assert_array_equal(np.asarray(ident), np.asarray(g))
+
+
+def test_wire_calib_updates_and_isolation():
+    k = jax.random.PRNGKey(0)
+    narrow = 0.1 * jax.random.normal(k, (64,))
+    wide = 5.0 * jax.random.normal(k, (64,))
+
+    c0 = init_wire_calib()
+    # first update adopts the batch stats outright
+    c0 = update_wire_calib(c0, narrow)
+    assert float(c0["count"]) == 1.0
+    np.testing.assert_allclose(float(c0["std"]),
+                               float(jnp.std(narrow)), rtol=1e-6)
+    # later updates EMA-blend
+    c0b = update_wire_calib(c0, 2.0 * narrow)
+    assert float(c0["std"]) < float(c0b["std"]) < float(
+        jnp.std(2.0 * narrow))
+
+    c1 = update_wire_calib(init_wire_calib(), wide)
+    err = float(calib_scale_error(c0, c1))
+    assert err > 0.5, err  # 50x scale gap -> clearly different state
+    same = float(calib_scale_error(c0, update_wire_calib(
+        init_wire_calib(), narrow)))
+    assert same < 1e-6, same
+
+
+def test_arrival_mask():
+    m = schedules.arrival_mask((1, 2, 3), 6)
+    assert m.shape == (6, 3)
+    np.testing.assert_array_equal(m[:, 0], [True] * 6)
+    np.testing.assert_array_equal(m[:, 1],
+                                  [True, False, True, False, True, False])
+    np.testing.assert_array_equal(
+        m[:, 2], [True, False, False, True, False, False])
+
+
+# ---------------------------------------------------------------------------
+# layer 3: the async scheduler (mesh-free, runs in-process)
+# ---------------------------------------------------------------------------
+
+def _async_setup(n_clients, client_scale=None, seed=0):
+    from repro.optim import AdamWConfig
+
+    cfg = get_config("llama3_2_3b").reduced()
+    hub = HubConfig(n_clients=n_clients,
+                    quant=QuantConfig(method="rdfsq", bits=2))
+    opt = AdamWConfig(lr=0.0, weight_decay=0.0)  # observe, don't move
+    state = schedules.init_hub_state(jax.random.PRNGKey(seed), cfg, hub,
+                                     opt)
+    if client_scale is not None:
+        scale = jnp.asarray(client_scale)
+        state["client_params"] = jax.tree_util.tree_map(
+            lambda a: a * scale.reshape((n_clients,) + (1,) *
+                                        (a.ndim - 1)).astype(a.dtype),
+            state["client_params"])
+    update = schedules.build_async_update(cfg, hub, opt, micro_batch=2,
+                                          seq=16)
+    tok = jax.random.randint(jax.random.PRNGKey(7),
+                             (n_clients, 2, 16), 0, cfg.vocab_size)
+    return cfg, hub, opt, state, update, tok
+
+
+def _slice_client(state, c):
+    """A solo (N=1) hub state holding exactly client c of ``state`` —
+    same server, client c's params/opt/calib sliced out."""
+    sliced = {k: jax.tree_util.tree_map(lambda a: a[c:c + 1], state[k])
+              for k in ("client_params", "client_opt", "calib")}
+    return dict(server=state["server"], **sliced)
+
+
+def test_per_client_calibration_isolation():
+    """Two clients with different activation scales produce different
+    codec calibration state, and neither client's wire quantization
+    error regresses vs training solo (satellite acceptance)."""
+    cfg, _, opt, state0, update, tok = _async_setup(
+        2, client_scale=(1.0, 3.0))
+    mask = jnp.ones((2,))
+    state = state0
+    for _ in range(3):
+        state, metrics = update(state, tok, tok, mask)
+    calib = state["calib"]
+    assert float(jnp.min(calib["count"])) == 3.0
+    c0 = {k: v[0] for k, v in calib.items()}
+    c1 = {k: v[1] for k, v in calib.items()}
+    # 3x block-weight scale -> visibly different activation ranges
+    assert float(calib_scale_error(c0, c1)) > 0.05
+    hub_err = np.asarray(metrics["quant_rel_err"])
+
+    # solo runs from the SAME initial weights (client c sliced out of the
+    # hub state): client c alone must see the same quantization error it
+    # saw inside the hub — no cross-client leakage through the codec
+    solo_hub = HubConfig(n_clients=1, quant=QuantConfig(method="rdfsq",
+                                                        bits=2))
+    upd_solo = schedules.build_async_update(cfg, solo_hub, opt,
+                                            micro_batch=2, seq=16)
+    for c in (0, 1):
+        s_solo = _slice_client(state0, c)
+        for _ in range(3):
+            s_solo, m_solo = upd_solo(s_solo, tok[c:c + 1], tok[c:c + 1],
+                                      jnp.ones((1,)))
+        solo_err = float(np.asarray(m_solo["quant_rel_err"])[0])
+        np.testing.assert_allclose(hub_err[c], solo_err, rtol=1e-4)
+        # and the solo codec state matches the hub's slice for client c
+        solo_c = {k: v[0] for k, v in s_solo["calib"].items()}
+        hub_c = {k: v[c] for k, v in calib.items()}
+        assert float(calib_scale_error(hub_c, solo_c)) < 1e-5
+
+
+def test_async_gating_freezes_non_arrivals():
+    """A non-arriving client's params, moments, step count and calib are
+    bit-identical before and after the tick (AdamW with a zero grad
+    would still decay weights — the gate must select the old state)."""
+    from repro.optim import AdamWConfig
+
+    cfg = get_config("llama3_2_3b").reduced()
+    hub = HubConfig(n_clients=2, quant=QuantConfig(method="rdfsq", bits=2))
+    opt = AdamWConfig(lr=1e-2, weight_decay=0.1)
+    state = schedules.init_hub_state(jax.random.PRNGKey(0), cfg, hub, opt)
+    update = schedules.build_async_update(cfg, hub, opt, micro_batch=2,
+                                          seq=16)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 2, 16), 0,
+                             cfg.vocab_size)
+    state2, _ = update(state, tok, tok, jnp.asarray([1.0, 0.0]))
+
+    def leaves(tree, idx):
+        return [np.asarray(a[idx]) for a in
+                jax.tree_util.tree_leaves(tree)]
+
+    for a, b in zip(leaves(state["client_params"], 1),
+                    leaves(state2["client_params"], 1)):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(leaves(state["client_opt"], 1),
+                    leaves(state2["client_opt"], 1)):
+        np.testing.assert_array_equal(a, b)
+    assert float(state2["calib"]["count"][1]) == 0.0
+    # the arriving client did move
+    changed = any(np.any(a != b) for a, b in
+                  zip(leaves(state["client_params"], 0),
+                      leaves(state2["client_params"], 0)))
+    assert changed
+    assert int(state2["client_opt"]["step"][0]) == 1
+    # server stepped once for the arrival
+    assert int(state2["server"].step) == 1
+
+
+# ---------------------------------------------------------------------------
+# SPMD lockstep hub: subprocess on the 8-fake-device mesh
+# ---------------------------------------------------------------------------
+
+def test_hub_parity_and_per_link_hlo():
+    """hub(N=1) == 2-partition pipeline loss (3e-6 acceptance bound) and
+    the 3-client heterogeneous hub's per-link static bytes match the
+    lowered HLO collective-permute traffic within 1%."""
+    r = _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        from repro.launch import split_hub as sh
+        p = sh.dryrun_parity()
+        assert p["diff"] < 3e-6, p
+        h = sh.dryrun_hub(n_clients=3)
+        assert len(h["wire_links"]) == 3
+        # heterogeneous: the nf-4bit link carries more than the rdfsq-2bit
+        assert h["wire_links"]["1->3"] > h["wire_links"]["0->3"]
+        print("HUB_OK")
+    """)
+    assert "HUB_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_async_hub_trains():
+    """Acceptance: async-mode train_hub shows monotone-ish loss decrease
+    (windowed means) with heterogeneous quants AND tick rates."""
+    r = _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        from repro.launch import split_hub as sh
+        res = sh.dryrun_train_async(n_ticks=18)
+        assert res["tail_mean"] < res["head_mean"], res
+        print("ASYNC_TRAIN_OK")
+    """)
+    assert "ASYNC_TRAIN_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_pipeline_update_step_cache():
+    """Repeated train_pipeline calls with the same configuration reuse
+    one jitted update (satellite: retire the recompile overhead)."""
+    r = _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        from repro.launch import split_pipeline as sp
+        sp.dryrun_train(n_steps=2, n_micro=2, micro_batch=4, seq=32)
+        info1 = sp._cached_pipeline_update.cache_info()
+        assert info1.misses == 1, info1
+        sp.dryrun_train(n_steps=2, n_micro=2, micro_batch=4, seq=32)
+        info2 = sp._cached_pipeline_update.cache_info()
+        assert info2.misses == 1 and info2.hits >= 1, info2
+        print("CACHE_OK")
+    """)
+    assert "CACHE_OK" in r.stdout, r.stdout + r.stderr
