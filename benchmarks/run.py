@@ -12,8 +12,8 @@ import sys
 import traceback
 
 from benchmarks import (attention_bench, fig4_attack, quant_bench, roofline,
-                        table1_entropy, table2_bits, table3_performance,
-                        table4_comm)
+                        serve_bench, table1_entropy, table2_bits,
+                        table3_performance, table4_comm)
 
 SUITES = {
     "table1": lambda fast: table1_entropy.run(),
@@ -25,6 +25,7 @@ SUITES = {
     "roofline": lambda fast: roofline.run(),
     "attention": lambda fast: attention_bench.run(fast=fast),
     "quant": lambda fast: quant_bench.run(fast=fast),
+    "serve": lambda fast: serve_bench.run(fast=fast),
 }
 
 

@@ -1,0 +1,214 @@
+"""Serving benchmark: continuous-batching engine vs static-batch generate.
+
+Drives a mixed workload (random prompt lengths, random output budgets,
+optionally Poisson arrivals) through
+
+* the static baseline — ``serve/decode.generate`` over fixed groups of
+  ``n_slots`` requests: every row in a group decodes until the LONGEST
+  budget in the group finishes, which is exactly the head-of-line cost
+  the engine removes; and
+* the continuous-batching engine — slot admission/retirement over the
+  paged KV pool, prefill separated from the decode tick.
+
+Both count only USEFUL tokens (each request's own budget), so the static
+baseline's wasted worst-case steps show up as lost tokens/s rather than
+being flattered.  Reported per mode: tokens/s, per-token latency p50/p99,
+time-to-first-token p50, and (engine) the page-table compile buckets.
+
+Results go to stdout as the harness CSV rows and to ``BENCH_serve.json``
+at the repo root (``--out`` overrides).
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.models import transformer as tf
+from repro.serve import decode as sd
+from repro.serve import paged
+from repro.serve.engine import ServeEngine
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+import jax  # noqa: E402  (after ROOT so --help works without a device)
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+def make_workload(rng: np.random.Generator, n: int, vocab: int,
+                  p_lo: int, p_hi: int, n_lo: int, n_hi: int
+                  ) -> List[Tuple[List[int], int]]:
+    """Mixed request lengths: the regime where static batching loses."""
+    return [(list(rng.integers(1, vocab, int(rng.integers(p_lo, p_hi + 1)))),
+             int(rng.integers(n_lo, n_hi + 1))) for _ in range(n)]
+
+
+def run_static(params, cfg, reqs, *, n_slots: int, cache_len: int) -> Dict:
+    """Fixed groups of ``n_slots``; each group decodes to its max budget."""
+    t0 = time.perf_counter()
+    lat: List[float] = []
+    ttft: List[float] = []
+    useful = 0
+    for g in range(0, len(reqs), n_slots):
+        group = reqs[g:g + n_slots]
+        maxp = max(len(t) for t, _ in group)
+        n_new = max(m for _, m in group)
+        toks = np.zeros((len(group), maxp), np.int32)
+        for i, (t, _) in enumerate(group):
+            toks[i, :len(t)] = t
+        gt0 = time.perf_counter()
+        out = sd.generate(params, cfg, dict(tokens=jnp.asarray(toks)),
+                          n_new=n_new, cache_len=cache_len)
+        jax.block_until_ready(out)
+        gel = time.perf_counter() - gt0
+        useful += sum(m for _, m in group)
+        # generate is opaque per-token: attribute the group wall time
+        # uniformly across its decode steps (prefill included in step 0)
+        per_step = gel / n_new
+        for _, m in group:
+            ttft.append(per_step)
+            lat.extend([per_step] * m)
+    elapsed = time.perf_counter() - t0
+    return dict(mode="static", tokens=useful, elapsed_s=elapsed,
+                tokens_per_s=useful / elapsed,
+                p50_ms=_percentile(lat, 50) * 1e3,
+                p99_ms=_percentile(lat, 99) * 1e3,
+                ttft_p50_ms=_percentile(ttft, 50) * 1e3)
+
+
+def run_engine(params, cfg, reqs, *, n_slots: int, page_size: int,
+               n_pages: int, arrivals: Optional[List[float]] = None,
+               split_wire=None) -> Dict:
+    """Continuous batching; ``arrivals`` (s, relative) enables open-loop
+    Poisson load — None means every request is queued at t=0."""
+    eng = ServeEngine(params, cfg, n_slots=n_slots, page_size=page_size,
+                      n_pages=n_pages, split_wire=split_wire)
+    arrivals = arrivals or [0.0] * len(reqs)
+    order = np.argsort(arrivals, kind="stable")
+    pending = [(arrivals[i], reqs[i]) for i in order]
+    t0 = time.perf_counter()
+    submitted = []
+    while pending or not eng.idle:
+        now = time.perf_counter() - t0
+        while pending and pending[0][0] <= now:
+            at, (toks, m) = pending.pop(0)
+            submitted.append(eng.submit(toks, max_new=m, arrival_time=at))
+        if eng.idle:
+            time.sleep(max(0.0, pending[0][0] - now))
+            continue
+        eng.step()
+    elapsed = time.perf_counter() - t0
+    lat: List[float] = []
+    ttft: List[float] = []
+    useful = 0
+    for rid in submitted:
+        r = eng.request(rid)
+        useful += len(r.out)
+        ttft.append((r.emit_times[0] - t0) - r.arrival_time)
+        lat.extend(np.diff(r.emit_times).tolist())
+    return dict(mode="engine", tokens=useful, elapsed_s=elapsed,
+                tokens_per_s=useful / elapsed,
+                p50_ms=_percentile(lat, 50) * 1e3,
+                p99_ms=_percentile(lat, 99) * 1e3,
+                ttft_p50_ms=_percentile(ttft, 50) * 1e3,
+                wire_bytes=eng.stats["wire_bytes"],
+                decode_ticks=eng.stats["decode_ticks"],
+                prefill_batches=eng.stats["prefill_batches"],
+                page_table_buckets=sorted(eng.stats["page_table_buckets"]))
+
+
+def run(fast: bool = True, out: Optional[str] = None,
+        seed: int = 0) -> Dict:
+    cfg16 = get_config("llama3_2_3b").reduced()
+    rng = np.random.default_rng(seed)
+    n_req = 8 if fast else 24
+    n_slots = 4
+    page_size = 8
+    p_lo, p_hi = 4, 24
+    n_lo, n_hi = 2, 12 if fast else 24
+    reqs = make_workload(rng, n_req, cfg16.vocab_size, p_lo, p_hi,
+                         n_lo, n_hi)
+    max_target = p_hi + n_hi
+    cache_len = paged.next_pow2(max_target)
+    n_pages = 1 + n_slots * (-(-cache_len // page_size))
+
+    results = []
+    for bits in (16, 8):
+        cfg = cfg16 if bits == 16 else dataclasses.replace(
+            cfg16, kv_cache_bits=bits)
+        params = tf.init_params(jax.random.PRNGKey(0), cfg)
+        common = dict(n_slots=n_slots, page_size=page_size, n_pages=n_pages)
+        # warmup pass populates every jit bucket, then the measured pass
+        run_static(params, cfg, reqs, n_slots=n_slots, cache_len=cache_len)
+        st = run_static(params, cfg, reqs, n_slots=n_slots,
+                        cache_len=cache_len)
+        run_engine(params, cfg, reqs, **common)
+        en = run_engine(params, cfg, reqs, **common)
+        for row in (st, en):
+            row.update(kv_bits=bits, offered_load_rps=None)
+            results.append(row)
+            emit(f"serve/{row['mode']}/kv{bits}",
+                 1e6 * row["elapsed_s"] / max(row["tokens"], 1),
+                 f"{row['tokens_per_s']:.1f}tok/s "
+                 f"p50={row['p50_ms']:.1f}ms p99={row['p99_ms']:.1f}ms")
+        if bits == 16 and not fast:
+            # open-loop Poisson arrivals at fractions of the closed-system
+            # service rate (requests/s)
+            closed_rps = en["tokens_per_s"] / np.mean(
+                [m for _, m in reqs])
+            for frac in (0.5, 1.0):
+                lam = closed_rps * frac
+                arr = np.cumsum(rng.exponential(1.0 / lam,
+                                                len(reqs))).tolist()
+                row = run_engine(params, cfg, reqs, arrivals=arr, **common)
+                row.update(kv_bits=bits, offered_load_rps=lam)
+                results.append(row)
+                emit(f"serve/engine/kv16/load{frac}",
+                     1e6 * row["elapsed_s"] / max(row["tokens"], 1),
+                     f"{row['tokens_per_s']:.1f}tok/s "
+                     f"p99={row['p99_ms']:.1f}ms")
+
+    doc = dict(
+        config="llama3_2_3b.reduced", n_requests=n_req, n_slots=n_slots,
+        page_size=page_size, n_pages=n_pages,
+        prompt_len=[p_lo, p_hi], max_new=[n_lo, n_hi],
+        backend=jax.default_backend(), smoke=fast, results=results)
+    path = pathlib.Path(out) if out else ROOT / "BENCH_serve.json"
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"wrote {path}")
+    eng16 = next(r for r in results
+                 if r["mode"] == "engine" and r["kv_bits"] == 16
+                 and r["offered_load_rps"] is None)
+    st16 = next(r for r in results
+                if r["mode"] == "static" and r["kv_bits"] == 16)
+    speedup = eng16["tokens_per_s"] / st16["tokens_per_s"]
+    print(f"engine vs static (kv16): {speedup:.2f}x tokens/s")
+    return doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload for CI")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: BENCH_serve.json)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(fast=args.smoke, out=args.out, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,12 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m benchmarks.run --fast --only roofline
 
+# Serving-engine smoke: continuous-batching engine vs static-batch
+# generate on a mixed-length workload; writes BENCH_serve.json (tokens/s,
+# p50/p99 per-token latency) at the repo root.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m benchmarks.serve_bench --smoke
+
 # Split-pipeline smoke: N=4-stage dry-run on 8 fake devices (asserts the
 # static per-link CommPayload wire bytes against the HLO
 # collective-permute measurement, incl. a mixed 2/4-bit topology) + a

@@ -140,3 +140,39 @@ def decode_q8_pallas(qf, k_codes, v_codes, k_scale, v_scale, kpos, qpos, *,
         qf, k_codes, v_codes, ks, vs, kpos,
         qpos.reshape(-1, 1).astype(jnp.int32),
         window=window, block=block, interpret=_interpret())
+
+
+def decode_paged_pallas(qf, k_pool, v_pool, pos_pool, page_table, qpos, *,
+                        window=None):
+    """Paged-pool decode (serving engine): the page table rides in as a
+    scalar-prefetch operand so pool pages are DMA'd straight from their
+    physical location — no gathered contiguous cache copy.  qf
+    (S, KH, G, D) pre-scaled; pools (P, pg, KH, D/Dv); page_table (S, npp)
+    with -1 for unallocated; qpos (S,).  Returns (S, KH, G, Dv) fp32."""
+    pg = k_pool.shape[1]
+    if not compiled_shape_ok(pg):
+        return attention_ref.decode_attention_paged_ref(
+            qf, k_pool, v_pool, pos_pool, page_table, qpos, window=window)
+    return decode_kernel.decode_paged(
+        qf, k_pool, v_pool, pos_pool, page_table.astype(jnp.int32),
+        qpos.reshape(-1, 1).astype(jnp.int32),
+        window=window, interpret=_interpret())
+
+
+def decode_paged_q8_pallas(qf, k_pool, v_pool, k_scale_pool, v_scale_pool,
+                           pos_pool, page_table, qpos, *, window=None):
+    """Paged int8-pool decode; absmax scales fold into the dots in-kernel.
+    Scale pools arrive in the engine's native (P, pg, KH) fp16 layout and
+    are cast/transposed to (P, KH, pg) fp32 here (D-times smaller than the
+    codes)."""
+    pg = k_pool.shape[1]
+    if not compiled_shape_ok(pg):
+        return attention_ref.decode_attention_paged_q8_ref(
+            qf, k_pool, v_pool, k_scale_pool, v_scale_pool, pos_pool,
+            page_table, qpos, window=window)
+    ks = k_scale_pool.astype(jnp.float32).transpose(0, 2, 1)
+    vs = v_scale_pool.astype(jnp.float32).transpose(0, 2, 1)
+    return decode_kernel.decode_paged_q8(
+        qf, k_pool, v_pool, ks, vs, pos_pool, page_table.astype(jnp.int32),
+        qpos.reshape(-1, 1).astype(jnp.int32),
+        window=window, interpret=_interpret())

@@ -264,3 +264,76 @@ def decode_attention_q8_ref(qf, k_codes, v_codes, k_scale, v_scale, kpos,
     return jnp.einsum("bkgs,bskd->bkgd", pv.astype(qf.dtype),
                       v_codes.astype(qf.dtype),
                       preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# paged decode references (serving engine: KV pool + per-request page table)
+# ---------------------------------------------------------------------------
+
+def gather_pages(pool, page_table):
+    """(P, pg, ...) pool + (S, npp) page table -> (S, npp * pg, ...) view.
+
+    Negative (unallocated) page-table entries are clamped to physical page
+    0 — the reserved null page — and the *caller* masks them out via the
+    gathered positions (``paged_kpos`` returns -1 for those slots), so the
+    clamped rows never contribute to attention.
+    """
+    pt = jnp.maximum(page_table, 0)
+    g = pool[pt]  # (S, npp, pg, ...)
+    s, npp, pg = g.shape[:3]
+    return g.reshape((s, npp * pg) + g.shape[3:])
+
+
+def paged_kpos(pos_pool, page_table):
+    """Gathered (S, L) key positions with unallocated pages forced to -1
+    (empty), regardless of what the clamped null page holds."""
+    kpos = gather_pages(pos_pool, page_table)
+    pg = pos_pool.shape[1]
+    alloc = jnp.repeat(page_table >= 0, pg, axis=1)
+    return jnp.where(alloc, kpos, -1)
+
+
+def _zero_fully_masked(out, kpos, qpos, window):
+    """Inactive slots (qpos = -1, or nothing visible) return 0, matching
+    the Pallas kernels' empty online-softmax state — plain softmax would
+    instead emit a uniform average of garbage rows."""
+    valid = (kpos >= 0) & (kpos <= qpos[:, None])
+    if window is not None:
+        valid &= qpos[:, None] - kpos < window
+    any_valid = jnp.any(valid, axis=-1)  # (S,)
+    return jnp.where(any_valid[:, None, None, None], out, 0.0)
+
+
+def decode_attention_paged_ref(qf, k_pool, v_pool, pos_pool, page_table,
+                               qpos, *, window=None):
+    """Single-token attention against a paged KV pool.
+
+    qf: (S, KH, G, D) pre-scaled grouped query; pools: (P, pg, KH, D/Dv)
+    with pos_pool (P, pg) absolute positions (-1 empty); page_table:
+    (S, npp) physical page per logical page (-1 unallocated); qpos: (S,)
+    (-1 for inactive slots, which return 0).  Returns (S, KH, G, Dv) fp32
+    — bit-identical to ``decode_attention_ref`` on the gathered contiguous
+    cache for every slot with at least one visible key.
+    """
+    k = gather_pages(k_pool, page_table)
+    v = gather_pages(v_pool, page_table)
+    kpos = paged_kpos(pos_pool, page_table)
+    out = decode_attention_ref(qf, k, v, kpos, qpos, window=window)
+    return _zero_fully_masked(out, kpos, qpos, window)
+
+
+def decode_attention_paged_q8_ref(qf, k_pool, v_pool, k_scale_pool,
+                                  v_scale_pool, pos_pool, page_table,
+                                  qpos, *, window=None):
+    """Paged int8-pool decode.  Pools: codes (P, pg, KH, D) int8, scales
+    (P, pg, KH) fp16; otherwise as ``decode_attention_paged_ref``."""
+    k = gather_pages(k_pool, page_table)
+    v = gather_pages(v_pool, page_table)
+    ks = gather_pages(k_scale_pool, page_table)
+    vs = gather_pages(v_scale_pool, page_table)
+    kpos = paged_kpos(pos_pool, page_table)
+    out = decode_attention_q8_ref(qf, k, v, ks, vs, kpos, qpos,
+                                  window=window)
+    return _zero_fully_masked(out, kpos, qpos, window)
+
+

@@ -208,3 +208,161 @@ def decode_q8(qf, k_codes, v_codes, k_scale, v_scale, kpos, qpos, *,
         ],
         interpret=interpret,
     )(qpos, kpos, qf, k_codes, v_codes, k_scale, v_scale)
+
+
+# ---------------------------------------------------------------------------
+# paged lookup path (serving engine: KV pool + per-request page tables)
+# ---------------------------------------------------------------------------
+#
+# The continuous-batching engine stores the KV cache as fixed-size pages
+# in a shared pool; each slot owns a page table mapping logical page j to
+# a physical pool page.  The page table rides in as a *scalar-prefetch*
+# operand (PrefetchScalarGridSpec), so the BlockSpec index maps read it to
+# DMA each slot's pages straight out of the pool — no gathered contiguous
+# copy of the cache ever exists.  Unallocated entries (-1) are clamped to
+# physical page 0 (the engine's reserved null page) for the DMA and masked
+# out in-kernel via the prefetched table, so whatever page 0 holds never
+# contributes.  Grid: (S, KH, npp), page axis innermost — the same
+# online-softmax scratch sweep as the contiguous kernels above.
+
+def _pt_phys(pt_ref, s, j):
+    """Clamped physical page for (slot s, logical page j)."""
+    return jnp.maximum(pt_ref[s, j], 0)
+
+
+def _decode_paged_kernel(pt_ref, qpos_ref, q_ref, k_ref, v_ref, pos_ref,
+                         o_ref, m_s, l_s, acc_s, *, window, npp):
+    s_idx = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, _NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    qp = qpos_ref[...]  # (1, 1) int32
+    kp = pos_ref[...]   # (1, pg) int32
+    valid = _valid(kp, qp, window) & (pt_ref[s_idx, j] >= 0)
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        q = q_ref[0, 0]          # (G, D), pre-scaled
+        k = k_ref[0, :, 0, :]    # (pg, D)
+        s = jax.lax.dot_general(q, k, _TRANS_B,
+                                preferred_element_type=jnp.float32)
+        s = jnp.where(valid, s, _NEG_INF)
+        _online_update(s, v_ref[0, :, 0, :], m_s, l_s, acc_s)
+
+    @pl.when(j == npp - 1)
+    def _finalize():
+        o_ref[0, 0] = acc_s[...] / jnp.maximum(l_s[...], 1e-30)
+
+
+def decode_paged(qf, k_pool, v_pool, pos_pool, page_table, qpos, *,
+                 window, interpret):
+    """Paged-pool decode.  qf: (S, KH, G, D) pre-scaled; pools
+    (P, pg, KH, D/Dv); pos_pool (P, pg) int32; page_table (S, npp) int32
+    (-1 = unallocated); qpos (S, 1) int32.  Returns (S, KH, G, Dv) fp32."""
+    s, kh, g, d = qf.shape
+    pg = k_pool.shape[1]
+    dv = v_pool.shape[-1]
+    npp = page_table.shape[1]
+    kernel = functools.partial(_decode_paged_kernel, window=window, npp=npp)
+    pool_map = lambda s_, kh_, j, pt: (_pt_phys(pt, s_, j), 0, kh_, 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(s, kh, npp),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda s_, kh_, j, pt: (s_, 0)),
+            pl.BlockSpec((1, 1, g, d), lambda s_, kh_, j, pt: (s_, kh_, 0, 0)),
+            pl.BlockSpec((1, pg, 1, d), pool_map),
+            pl.BlockSpec((1, pg, 1, dv), pool_map),
+            pl.BlockSpec((1, pg),
+                         lambda s_, kh_, j, pt: (_pt_phys(pt, s_, j), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dv),
+                               lambda s_, kh_, j, pt: (s_, kh_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, kh, g, dv), jnp.float32),
+        interpret=interpret,
+    )(page_table, qpos, qf, k_pool, v_pool, pos_pool)
+
+
+def _decode_paged_q8_kernel(pt_ref, qpos_ref, q_ref, k_ref, v_ref, ks_ref,
+                            vs_ref, pos_ref, o_ref, m_s, l_s, acc_s, *,
+                            window, npp):
+    s_idx = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, _NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    qp = qpos_ref[...]
+    kp = pos_ref[...]
+    valid = _valid(kp, qp, window) & (pt_ref[s_idx, j] >= 0)
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        q = q_ref[0, 0]                        # (G, D)
+        k = k_ref[0, :, 0, :].astype(q.dtype)  # (pg, D) int8 codes
+        s = jax.lax.dot_general(q, k, _TRANS_B,
+                                preferred_element_type=jnp.float32)
+        s = s * ks_ref[0]                      # fold K absmax scales
+        s = jnp.where(valid, s, _NEG_INF)
+        _online_update(s, v_ref[0, :, 0, :].astype(q.dtype), m_s, l_s,
+                       acc_s, p_scale=vs_ref[0])  # fold V absmax scales
+
+    @pl.when(j == npp - 1)
+    def _finalize():
+        o_ref[0, 0] = acc_s[...] / jnp.maximum(l_s[...], 1e-30)
+
+
+def decode_paged_q8(qf, k_pool, v_pool, k_scale, v_scale, pos_pool,
+                    page_table, qpos, *, window, interpret):
+    """Paged int8-pool decode.  Codes (P, pg, KH, D) int8; scales
+    (P, KH, pg) fp32 (pre-transposed by the caller); otherwise as
+    :func:`decode_paged`.  Returns (S, KH, G, D) fp32."""
+    s, kh, g, d = qf.shape
+    pg = k_pool.shape[1]
+    npp = page_table.shape[1]
+    kernel = functools.partial(_decode_paged_q8_kernel, window=window,
+                               npp=npp)
+    pool_map = lambda s_, kh_, j, pt: (_pt_phys(pt, s_, j), 0, kh_, 0)
+    scale_map = lambda s_, kh_, j, pt: (_pt_phys(pt, s_, j), kh_, 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(s, kh, npp),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda s_, kh_, j, pt: (s_, 0)),
+            pl.BlockSpec((1, 1, g, d), lambda s_, kh_, j, pt: (s_, kh_, 0, 0)),
+            pl.BlockSpec((1, pg, 1, d), pool_map),
+            pl.BlockSpec((1, pg, 1, d), pool_map),
+            pl.BlockSpec((1, 1, pg), scale_map),
+            pl.BlockSpec((1, 1, pg), scale_map),
+            pl.BlockSpec((1, pg),
+                         lambda s_, kh_, j, pt: (_pt_phys(pt, s_, j), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda s_, kh_, j, pt: (s_, kh_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, kh, g, d), jnp.float32),
+        interpret=interpret,
+    )(page_table, qpos, qf, k_pool, v_pool, k_scale, v_scale, pos_pool)

@@ -33,6 +33,8 @@ import jax.numpy as jnp
 
 from repro.kernels import attention_ops
 from repro.kernels.attention_ref import (_FAR, _NEG_INF,
+                                         decode_attention_paged_q8_ref,
+                                         decode_attention_paged_ref,
                                          decode_attention_q8_ref,
                                          decode_attention_ref,
                                          flash_reference)
@@ -41,7 +43,9 @@ from repro.sharding import ctx as shard_ctx
 
 __all__ = [
     "init_attention_params", "flash_attention", "decode_attention",
-    "decode_attention_q8", "gqa_forward", "gqa_decode", "init_kv_cache",
+    "decode_attention_q8", "decode_attention_paged",
+    "decode_attention_paged_q8", "gqa_forward", "gqa_decode",
+    "gqa_decode_paged", "init_kv_cache", "init_paged_kv_pool",
     "quantize_kv_token", "_NEG_INF",
 ]
 
@@ -155,6 +159,46 @@ def decode_attention_q8(q, k_codes, v_codes, k_scale, v_scale, kpos, qpos, *,
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
+def decode_attention_paged(q, k_pool, v_pool, pos_pool, page_table, qpos, *,
+                           window: Optional[int] = None,
+                           impl: Optional[str] = None) -> jnp.ndarray:
+    """Single-token attention against a paged KV pool (serving engine).
+
+    q: (S, 1, H, D) one row per scheduler slot; pools: (P, pg, KH, D/Dv)
+    with pos_pool (P, pg) absolute positions (-1 empty); page_table:
+    (S, npp) physical page per logical page (-1 unallocated); qpos: (S,)
+    with -1 marking inactive slots (their output is 0).
+    """
+    s, _, h, _ = q.shape
+    qf = _grouped_query(q, k_pool.shape[2])
+    if attention_ops.resolve_impl(impl) == "pallas":
+        out = attention_ops.decode_paged_pallas(
+            qf, k_pool, v_pool, pos_pool, page_table, qpos, window=window)
+    else:
+        out = decode_attention_paged_ref(
+            qf, k_pool, v_pool, pos_pool, page_table, qpos, window=window)
+    return out.reshape(s, 1, h, v_pool.shape[-1]).astype(q.dtype)
+
+
+def decode_attention_paged_q8(q, k_pool, v_pool, k_scale_pool, v_scale_pool,
+                              pos_pool, page_table, qpos, *,
+                              window: Optional[int] = None,
+                              impl: Optional[str] = None) -> jnp.ndarray:
+    """Paged int8-pool decode; scale pools (P, pg, KH) fp16 fold into the
+    dots exactly as in ``decode_attention_q8``."""
+    s, _, h, d = q.shape
+    qf = _grouped_query(q, k_pool.shape[2])
+    if attention_ops.resolve_impl(impl) == "pallas":
+        out = attention_ops.decode_paged_q8_pallas(
+            qf, k_pool, v_pool, k_scale_pool, v_scale_pool, pos_pool,
+            page_table, qpos, window=window)
+    else:
+        out = decode_attention_paged_q8_ref(
+            qf, k_pool, v_pool, k_scale_pool, v_scale_pool, pos_pool,
+            page_table, qpos, window=window)
+    return out.reshape(s, 1, h, d).astype(q.dtype)
+
+
 def gqa_forward(params: Dict, x: jnp.ndarray, *, n_heads: int,
                 n_kv_heads: int, head_dim: int, rope_theta: float,
                 positions: jnp.ndarray, causal: bool = True,
@@ -218,6 +262,58 @@ def gqa_decode(params: Dict, x: jnp.ndarray, cache: Dict, *, n_heads: int,
     return y, dict(k=k_cache, v=v_cache, pos=kpos)
 
 
+def gqa_decode_paged(params: Dict, x: jnp.ndarray, cache: Dict, *,
+                     n_heads: int, n_kv_heads: int, head_dim: int,
+                     rope_theta: float, qpos: jnp.ndarray,
+                     page_table: jnp.ndarray,
+                     window: Optional[int] = None):
+    """One decode tick against a paged KV pool.
+
+    ``cache`` = {k, v, pos[, k_scale, v_scale]} pools of shape
+    (P, pg, ...); ``page_table`` (S, npp) maps each slot's logical pages
+    to physical ones; ``qpos`` (S,) is the position of the token being
+    decoded, -1 for inactive slots.  Inactive (or unallocated) writes are
+    routed to the reserved trash page 0 with pos = -1, so they are never
+    attended to.  Returns (y, new_cache); the page table is host-owned
+    and never mutated here.
+    """
+    s, s1, _ = x.shape
+    assert s1 == 1
+    pg = cache["k"].shape[1]
+    q = (x @ params["wq"].astype(x.dtype)).reshape(s, 1, n_heads, head_dim)
+    k = (x @ params["wk"].astype(x.dtype)).reshape(s, 1, n_kv_heads, head_dim)
+    v = (x @ params["wv"].astype(x.dtype)).reshape(s, 1, n_kv_heads, head_dim)
+    cos, sin = rope_angles(qpos[:, None], head_dim, rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    active = qpos >= 0
+    qp = jnp.maximum(qpos, 0)
+    phys = page_table[jnp.arange(s), qp // pg]
+    phys = jnp.where(active & (phys >= 0), phys, 0)
+    off = qp % pg
+    pos_pool = cache["pos"].at[phys, off].set(jnp.where(active, qpos, -1))
+    if "k_scale" in cache:  # int8-quantized pool
+        kc, ks = quantize_kv_token(k[:, 0])
+        vc, vs = quantize_kv_token(v[:, 0])
+        k_pool = cache["k"].at[phys, off].set(kc)
+        v_pool = cache["v"].at[phys, off].set(vc)
+        k_scale = cache["k_scale"].at[phys, off].set(ks)
+        v_scale = cache["v_scale"].at[phys, off].set(vs)
+        out = decode_attention_paged_q8(q, k_pool, v_pool, k_scale, v_scale,
+                                        pos_pool, page_table, qpos,
+                                        window=window)
+        y = out.reshape(s, 1, n_heads * head_dim) @ \
+            params["wo"].astype(x.dtype)
+        return y, dict(k=k_pool, v=v_pool, k_scale=k_scale,
+                       v_scale=v_scale, pos=pos_pool)
+    k_pool = cache["k"].at[phys, off].set(k[:, 0].astype(cache["k"].dtype))
+    v_pool = cache["v"].at[phys, off].set(v[:, 0].astype(cache["v"].dtype))
+    out = decode_attention_paged(q, k_pool, v_pool, pos_pool, page_table,
+                                 qpos, window=window)
+    y = out.reshape(s, 1, n_heads * head_dim) @ params["wo"].astype(x.dtype)
+    return y, dict(k=k_pool, v=v_pool, pos=pos_pool)
+
+
 def init_kv_cache(batch: int, length: int, n_kv_heads: int, head_dim: int,
                   dtype=jnp.bfloat16, bits: int = 16) -> Dict:
     """bits=8: int8-quantized cache (BEYOND-PAPER: the paper's activation
@@ -237,6 +333,32 @@ def init_kv_cache(batch: int, length: int, n_kv_heads: int, head_dim: int,
         k=jnp.zeros((batch, length, n_kv_heads, head_dim), dtype),
         v=jnp.zeros((batch, length, n_kv_heads, head_dim), dtype),
         pos=jnp.full((batch, length), -1, jnp.int32),
+    )
+
+
+def init_paged_kv_pool(n_pages: int, page_size: int, n_kv_heads: int,
+                       head_dim: int, dtype=jnp.bfloat16,
+                       bits: int = 16) -> Dict:
+    """Paged twin of ``init_kv_cache``: (P, pg, ...) pools shared by every
+    request, indexed through per-request page tables.  Physical page 0 is
+    reserved as the trash page (inactive-slot writes land there and its
+    pos stays -1), so allocators must hand out pages 1..P-1 only."""
+    if bits == 8:
+        return dict(
+            k=jnp.zeros((n_pages, page_size, n_kv_heads, head_dim),
+                        jnp.int8),
+            v=jnp.zeros((n_pages, page_size, n_kv_heads, head_dim),
+                        jnp.int8),
+            k_scale=jnp.zeros((n_pages, page_size, n_kv_heads),
+                              jnp.float16),
+            v_scale=jnp.zeros((n_pages, page_size, n_kv_heads),
+                              jnp.float16),
+            pos=jnp.full((n_pages, page_size), -1, jnp.int32),
+        )
+    return dict(
+        k=jnp.zeros((n_pages, page_size, n_kv_heads, head_dim), dtype),
+        v=jnp.zeros((n_pages, page_size, n_kv_heads, head_dim), dtype),
+        pos=jnp.full((n_pages, page_size), -1, jnp.int32),
     )
 
 

@@ -256,8 +256,13 @@ def _fill_kv_cache(cfg: ArchConfig, kv, cache_len: int, positions):
 
 
 def block_decode(cfg: ArchConfig, block_type: str, p: Dict, x: jnp.ndarray,
-                 cache, *, qpos, window, emb0=None):
-    """One-token block step. Returns (x, new_cache)."""
+                 cache, *, qpos, window, emb0=None, page_table=None):
+    """One-token block step. Returns (x, new_cache).
+
+    ``page_table`` (S, npp) switches the attention blocks onto the paged
+    KV pool path (serving engine): ``cache`` is then the (P, pg, ...) pool
+    tree from ``attn_mod.init_paged_kv_pool`` and the batch axis of ``x``
+    is the scheduler slot axis."""
     if block_type in ("dense", "moe", "shared_attn"):
         if block_type == "shared_attn":
             xin = jnp.concatenate([x, emb0], axis=-1) @ \
@@ -265,7 +270,16 @@ def block_decode(cfg: ArchConfig, block_type: str, p: Dict, x: jnp.ndarray,
         else:
             xin = x
         h = rms_norm(xin, p["ln1"], cfg.norm_eps)
-        if cfg.attn_type == "mla":
+        if page_table is not None:
+            if cfg.attn_type == "mla":
+                raise NotImplementedError("paged decode requires GQA KV "
+                                          "caches (attn_type != mla)")
+            a, new_cache = attn_mod.gqa_decode_paged(
+                p["attn"], h, cache, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                rope_theta=cfg.rope_theta, qpos=qpos,
+                page_table=page_table, window=window)
+        elif cfg.attn_type == "mla":
             a, new_cache = mla_mod.mla_decode(
                 p["attn"], h, cache, n_heads=cfg.n_heads,
                 qk_nope_dim=cfg.qk_nope_dim, qk_rope_dim=cfg.qk_rope_dim,
@@ -346,6 +360,34 @@ def init_caches(cfg: ArchConfig, batch: int, cache_len: int,
     return out
 
 
+def init_paged_caches(cfg: ArchConfig, n_pages: int, page_size: int,
+                      dtype=jnp.bfloat16):
+    """Stacked paged KV pools per segment, keyed like ``init_caches``.
+
+    One (P, pg, ...) pool per layer (leading layer axis per segment); the
+    per-request page table is shared across layers, so page p always means
+    the same logical span in every layer's pool.  Serving-engine only:
+    requires every block to be an attention block with GQA caches."""
+    if cfg.attn_type == "mla":
+        raise NotImplementedError("paged serving requires GQA KV caches")
+    client_segs, server_segs = cfg.client_server_segments()
+    out = {}
+    for side, segs in (("client", client_segs), ("server", server_segs)):
+        side_caches = {}
+        for i, (t, n) in enumerate(segs):
+            if t not in ("dense", "moe", "shared_attn"):
+                raise NotImplementedError(
+                    f"paged serving does not support {t} blocks")
+            one = attn_mod.init_paged_kv_pool(
+                n_pages, page_size, cfg.n_kv_heads, cfg.head_dim, dtype,
+                bits=cfg.kv_cache_bits)
+            side_caches[f"seg{i}"] = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy()
+                if n > 1 else a[None], one)
+        out[side] = side_caches
+    return out
+
+
 # ---------------------------------------------------------------------------
 # whole-model init
 # ---------------------------------------------------------------------------
@@ -401,8 +443,14 @@ def init_params(key, cfg: ArchConfig) -> Dict:
 def _embed_inputs(params, cfg: ArchConfig, batch: Dict) -> jnp.ndarray:
     dtype = cdtype(cfg)
     if cfg.modality == "vlm":
-        img = mlp_forward(params["connector"],
-                          batch["image_embeds"].astype(dtype))
+        if "image_features" in batch:
+            # split-serve: the client ran the vision tower + connector and
+            # shipped the connector activations over the quantized wire —
+            # the server embeds them as-is (core/split.serve_*).
+            img = batch["image_features"].astype(dtype)
+        else:
+            img = mlp_forward(params["connector"],
+                              batch["image_embeds"].astype(dtype))
         tok = emb_mod.embed(params["embed"], batch["tokens"], dtype)
         return jnp.concatenate([img, tok], axis=1)
     if cfg.modality == "audio":
@@ -544,3 +592,57 @@ def decode_step(params, cfg: ArchConfig, caches: Dict, batch: Dict,
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = emb_mod.head_logits(params["head"], x)
     return logits, new_caches
+
+
+def decode_step_paged(params, cfg: ArchConfig, pools: Dict, batch: Dict,
+                      qpos: jnp.ndarray, page_table: jnp.ndarray, *,
+                      window: Optional[int] = None,
+                      rng: Optional[jax.Array] = None):
+    """One decode tick of the serving engine against paged KV pools.
+
+    ``pools``: tree from ``init_paged_caches``; ``page_table``: (S, npp)
+    int32, -1 = unallocated; ``qpos``: (S,), -1 = inactive slot (its
+    logits are garbage and its KV write lands on the trash page).
+    Returns (logits, new_pools)."""
+    dtype = cdtype(cfg)
+    if cfg.modality == "audio":
+        x = emb_mod.embed_codebooks(params["embed"], batch["codes"], dtype)
+    else:
+        x = emb_mod.embed(params["embed"], batch["tokens"], dtype)
+    emb0 = x
+    client_segs, server_segs = cfg.client_server_segments()
+    new_pools = {"client": {}, "server": {}}
+
+    def run_side(side, segs, x):
+        for i, (t, n) in enumerate(segs):
+            cache = pools[side][f"seg{i}"]
+            if t == "shared_attn":
+                x, c_new = block_decode(
+                    cfg, t, params["shared_attn"], x,
+                    jax.tree_util.tree_map(lambda a: a[0], cache),
+                    qpos=qpos, window=window, emb0=emb0,
+                    page_table=page_table)
+                new_pools[side][f"seg{i}"] = jax.tree_util.tree_map(
+                    lambda a: a[None], c_new)
+                continue
+            stacked = params[side][f"seg{i}"]
+
+            def body(carry, pc, _t=t):
+                p, c = pc
+                y, c_new = block_decode(cfg, _t, p, carry, c, qpos=qpos,
+                                        window=window, emb0=emb0,
+                                        page_table=page_table)
+                return y, c_new
+
+            x, seg_pools = stack_mod.run_decode_stack(body, x, stacked,
+                                                      cache)
+            new_pools[side][f"seg{i}"] = seg_pools
+        return x
+
+    x = run_side("client", client_segs, x)
+    x, _ = split_mod.compressor_roundtrip(params.get("codec"), cfg.split, x,
+                                          rng)
+    x = run_side("server", server_segs, x)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = emb_mod.head_logits(params["head"], x)
+    return logits, new_pools

@@ -1,4 +1,12 @@
-from repro.serve.decode import (cache_length, generate, make_serve_step,
-                                prefill)
+from repro.serve.decode import (cache_length, compiled_serve_step, generate,
+                                make_serve_step, prefill)
+from repro.serve.engine import ServeEngine
+from repro.serve.paged import (compiled_paged_step, init_pools,
+                               insert_prefill, make_paged_step, next_pow2)
+from repro.serve.pool import PagePool
+from repro.serve.scheduler import Request, SlotScheduler
 
-__all__ = ["cache_length", "generate", "make_serve_step", "prefill"]
+__all__ = ["cache_length", "compiled_serve_step", "generate",
+           "make_serve_step", "prefill", "ServeEngine", "PagePool",
+           "Request", "SlotScheduler", "compiled_paged_step", "init_pools",
+           "insert_prefill", "make_paged_step", "next_pow2"]

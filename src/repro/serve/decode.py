@@ -53,25 +53,60 @@ def _compiled_serve_step(cfg: ArchConfig, window: Optional[int],
     The resolved attention backend is part of the key: REPRO_ATTN_IMPL is
     read at trace time, so flipping it between ``generate`` calls must
     miss the cache rather than silently reuse the other backend's step.
+
+    ``caches`` is DONATED: the per-token step updates the KV ring buffers
+    in place (XLA input/output aliasing) instead of materializing a full
+    cache copy per token.  Callers must not reuse a caches tree after
+    passing it in — rebind it from the step's return value.
     """
     del attn_impl  # cache key only; the traced code reads the env var
-    return jax.jit(make_serve_step(cfg, window=window))
+    return jax.jit(make_serve_step(cfg, window=window), donate_argnums=(1,))
+
+
+def compiled_serve_step(cfg: ArchConfig, *, window: Optional[int] = None,
+                        impl: Optional[str] = None) -> Callable:
+    """Public accessor for the cached jitted step (engine + benches)."""
+    return _compiled_serve_step(cfg, window,
+                                attention_ops.resolve_impl(impl))
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_prefill(cfg: ArchConfig, cache_len: int,
+                      window: Optional[int], attn_impl: str) -> Callable:
+    del attn_impl  # cache key only; the traced code reads the env var
+
+    def _prefill(params, batch, rng):
+        logits, _aux, caches = tf.forward(params, cfg, batch, rng=rng,
+                                          window=window,
+                                          collect_cache=cache_len)
+        return logits, caches
+
+    return jax.jit(_prefill)
 
 
 def prefill(params, cfg: ArchConfig, batch: Dict, cache_len: int, *,
             window: Optional[int] = None,
             rng: Optional[jax.Array] = None):
-    """Run the full-sequence pass and return (last_logits, caches)."""
-    logits, aux, caches = tf.forward(params, cfg, batch, rng=rng,
-                                     window=window, collect_cache=cache_len)
-    return logits, caches
+    """Run the full-sequence pass and return (logits, caches).
+
+    Jitted and cached per (cfg, cache_len, window, backend): the serving
+    engine prefills every admission wave through here, so an unjitted
+    (op-by-op) forward would dominate its tick time."""
+    fn = _compiled_prefill(cfg, cache_len, window,
+                           attention_ops.resolve_impl(None))
+    return fn(params, batch, rng)
 
 
 def generate(params, cfg: ArchConfig, batch: Dict, *, n_new: int,
              cache_len: int, window: Optional[int] = None,
-             temperature: float = 0.0, rng: Optional[jax.Array] = None
-             ) -> jnp.ndarray:
-    """Prefill + greedy/sampled generation of ``n_new`` tokens."""
+             temperature: float = 0.0, rng: Optional[jax.Array] = None,
+             eos_id: Optional[int] = None, pad_id: int = 0) -> jnp.ndarray:
+    """Prefill + greedy/sampled generation of ``n_new`` tokens.
+
+    ``eos_id`` enables per-sequence early stop: a row that emits EOS is
+    frozen — every later position is ``pad_id`` regardless of continued
+    stepping — and the decode loop exits as soon as ALL rows finished
+    instead of always paying ``n_new`` steps."""
     if rng is None:
         rng = jax.random.PRNGKey(0)
     # Split BEFORE consuming: prefill (dropout / quantizer noise) and the
@@ -101,11 +136,25 @@ def generate(params, cfg: ArchConfig, batch: Dict, *, n_new: int,
             return jnp.argmax(last, axis=-1)
         return jax.random.categorical(key, last / temperature, axis=-1)
 
+    def freeze(tok, done):
+        d = done if tok.ndim == 1 else done[:, None]
+        return jnp.where(d, jnp.asarray(pad_id, tok.dtype), tok)
+
     out = []
+    done = jnp.zeros((bsz,), bool)
     rng, first_key = jax.random.split(rng)
     tok = pick(logits, first_key)
     for i in range(n_new):
+        if eos_id is not None:
+            tok = freeze(tok, done)
+            hit = (tok == eos_id) if tok.ndim == 1 \
+                else jnp.all(tok == eos_id, axis=-1)
+            done = done | hit
         out.append(tok)
+        if eos_id is not None and i + 1 < n_new and bool(jnp.all(done)):
+            pad = jnp.full_like(tok, pad_id)
+            out.extend([pad] * (n_new - i - 1))
+            break
         qpos = jnp.full((bsz,), prompt_len + i, jnp.int32)
         if cfg.modality == "audio":
             step_batch = dict(codes=tok[..., None].astype(jnp.int32)

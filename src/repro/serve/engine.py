@@ -1,0 +1,235 @@
+"""Continuous-batching serving engine over the paged KV pool.
+
+vLLM-style serving loop for the split-deployment server half
+(ROADMAP item 1): requests arrive at any time, are admitted into decode
+slots as soon as a slot AND their full page reservation are available,
+and retire the moment they hit EOS or their token budget — their pages
+return to the pool immediately, so a long request never stalls short
+ones and short ones never pay the longest request's latency.
+
+One engine ``step()`` is: retire -> admit (+ batched prefill of the
+admissions) -> one decode tick over every active slot.  Prefill runs as
+its own batched forward (``serve/decode.prefill`` on a bucketed shape),
+so admission never recompiles or stalls the in-flight decode step; the
+prefilled ring caches are scattered into the paged pools by
+``paged.insert_prefill`` (pools donated, in-place).
+
+Split-serve mode (``split_wire=QuantConfig(...)``): the client is assumed
+to hold the vision tower + connector; the engine runs the connector
+client-side, ships the connector activations through the existing wire
+codec (``core/quantizers`` encode -> decode, the PR-3/6 machinery), feeds
+the reconstruction to the server prefill via the ``image_features``
+bypass, and accounts the payload bytes in ``stats['wire_bytes']`` —
+matching ``WireLink.fwd_wire_bytes`` static accounting.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import quantizers
+from repro.core.quantizers import QuantConfig
+from repro.models import transformer as tf
+from repro.models.layers.mlp import mlp_forward
+from repro.serve import decode as sd
+from repro.serve import paged
+from repro.serve.pool import PagePool
+from repro.serve.scheduler import Request, SlotScheduler
+
+__all__ = ["ServeEngine"]
+
+
+class ServeEngine:
+    """Slot-based continuous-batching engine (single host, one model)."""
+
+    def __init__(self, params, cfg: ArchConfig, *, n_slots: int,
+                 page_size: int, n_pages: int,
+                 window: Optional[int] = None, temperature: float = 0.0,
+                 eos_id: Optional[int] = None, seed: int = 0,
+                 split_wire: Optional[QuantConfig] = None,
+                 impl: Optional[str] = None):
+        if cfg.modality == "audio":
+            raise NotImplementedError("engine serves text/vlm configs")
+        self.params = params
+        self.cfg = cfg
+        self.page_size = page_size
+        self.window = window
+        self.temperature = temperature
+        self.eos_id = eos_id
+        self.split_wire = split_wire
+        self.impl = impl
+        self.pools = paged.init_pools(cfg, n_pages, page_size)
+        self.page_pool = PagePool(n_pages)
+        n_img = cfg.n_image_tokens if cfg.modality == "vlm" else 0
+        self.n_image_tokens = n_img
+        self.scheduler = SlotScheduler(n_slots, self.page_pool, page_size,
+                                       n_image_tokens=n_img)
+        self._step_fn = paged.compiled_paged_step(cfg, window=window,
+                                                  impl=impl)
+        self._rng = jax.random.PRNGKey(seed)
+        self._next_rid = 0
+        self.stats = dict(wire_bytes=0, prefill_batches=0, decode_ticks=0,
+                          tokens_emitted=0, admitted=0, retired=0,
+                          page_table_buckets=set())
+
+    # -- request intake -------------------------------------------------
+    def submit(self, tokens: List[int], *, max_new: int,
+               image_embeds=None, arrival_time: float = 0.0) -> int:
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if self.cfg.modality == "vlm" and image_embeds is None:
+            raise ValueError("vlm configs require image_embeds per request")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.scheduler.submit(Request(rid=rid, tokens=list(tokens),
+                                      max_new=max_new,
+                                      image_embeds=image_embeds,
+                                      arrival_time=arrival_time))
+        return rid
+
+    @property
+    def idle(self) -> bool:
+        return self.scheduler.idle
+
+    def request(self, rid: int) -> Request:
+        return self.scheduler.requests[rid]
+
+    # -- sampling -------------------------------------------------------
+    def _pick(self, last_logits: np.ndarray) -> np.ndarray:
+        """(m, V) -> (m,) token ids (greedy, or temperature sampling)."""
+        if self.temperature <= 0.0:
+            return np.argmax(last_logits, axis=-1)
+        self._rng, sub = jax.random.split(self._rng)
+        return np.asarray(jax.random.categorical(
+            sub, jnp.asarray(last_logits) / self.temperature, axis=-1))
+
+    def _maybe_finish(self, req: Request, tok: int) -> None:
+        if self.eos_id is not None and tok == self.eos_id:
+            self.scheduler.retire(req, "eos")
+        elif len(req.out) >= req.max_new:
+            self.scheduler.retire(req, "length")
+        if req.state == "done":
+            self.stats["retired"] += 1
+
+    # -- prefill (admission batch) --------------------------------------
+    def _ship_image_features(self, image_embeds: jnp.ndarray) -> jnp.ndarray:
+        """Client-side connector -> quantized wire -> server-side
+        reconstruction, with payload byte accounting."""
+        feats = mlp_forward(self.params["connector"],
+                            image_embeds.astype(tf.cdtype(self.cfg)))
+        payload = quantizers.encode(self.split_wire, feats)
+        self.stats["wire_bytes"] += payload.wire_bytes()
+        return quantizers.decode(self.split_wire, payload)
+
+    def _prefill(self, admitted: List[Request]) -> None:
+        cfg, pg = self.cfg, self.page_size
+        n_img = self.n_image_tokens
+        plens = [len(r.tokens) for r in admitted]
+        # bucket the prefill shape: pow2 page count for the ring length,
+        # pow2 row count — bounded set of compiled prefill shapes.
+        npb = paged.next_pow2(-(-(n_img + max(plens)) // pg))
+        lb = npb * pg
+        rows = paged.next_pow2(len(admitted))
+        lp = lb - n_img  # token length such that positions cover exactly lb
+        tokens = np.zeros((rows, lp), np.int32)
+        for i, r in enumerate(admitted):
+            tokens[i, :len(r.tokens)] = r.tokens
+        batch: Dict = dict(tokens=jnp.asarray(tokens))
+        if cfg.modality == "vlm":
+            imgs = np.stack(
+                [np.asarray(r.image_embeds) for r in admitted]
+                + [np.zeros_like(np.asarray(admitted[0].image_embeds))]
+                * (rows - len(admitted)))
+            if self.split_wire is not None:
+                batch["image_features"] = self._ship_image_features(
+                    jnp.asarray(imgs))
+            else:
+                batch["image_embeds"] = jnp.asarray(imgs)
+        self._rng, prefill_rng = jax.random.split(self._rng)
+        logits, caches = sd.prefill(self.params, cfg, batch, lb,
+                                    window=self.window, rng=prefill_rng)
+        # scatter the ring caches into each request's physical pages;
+        # logical pages past a row's reservation (and the dummy rows) go
+        # to the trash page, right-padding is masked to pos = -1.
+        page_rows = np.zeros((rows, npb), np.int32)
+        valid_len = np.zeros((rows,), np.int32)
+        for i, r in enumerate(admitted):
+            row = (r.pages + [0] * npb)[:npb]
+            page_rows[i] = row
+            valid_len[i] = n_img + plens[i]
+        self.pools = paged.insert_prefill(self.pools, caches,
+                                          jnp.asarray(page_rows),
+                                          jnp.asarray(valid_len))
+        # first emitted token: the pick at each row's LAST REAL position
+        # (right-padded rows must not read the pad tail's logits).
+        lg = np.asarray(logits)
+        last = lg[np.arange(len(admitted)),
+                  [n_img + p - 1 for p in plens]]
+        toks = self._pick(last)
+        now = time.perf_counter()
+        for r, tok in zip(admitted, toks):
+            r.out.append(int(tok))
+            r.prefill_time = now
+            r.emit_times.append(now)
+            self.stats["tokens_emitted"] += 1
+            self._maybe_finish(r, int(tok))
+        self.stats["prefill_batches"] += 1
+        self.stats["admitted"] += len(admitted)
+
+    # -- decode tick ----------------------------------------------------
+    def _decode_tick(self, active: List[Request]) -> None:
+        pg = self.page_size
+        s = self.scheduler.n_slots
+        npp = paged.next_pow2(max(r.qpos // pg + 1 for r in active))
+        self.stats["page_table_buckets"].add(npp)
+        tokens = np.zeros((s, 1), np.int32)
+        qpos = np.full((s,), -1, np.int32)
+        page_table = np.full((s, npp), -1, np.int32)
+        for r in active:
+            tokens[r.slot, 0] = r.out[-1]
+            qpos[r.slot] = r.qpos
+            row = r.pages[:npp]
+            page_table[r.slot, :len(row)] = row
+        logits, self.pools = self._step_fn(
+            self.params, self.pools, dict(tokens=jnp.asarray(tokens)),
+            jnp.asarray(qpos), jnp.asarray(page_table))
+        last = np.asarray(logits)[:, -1]
+        toks = self._pick(last)
+        now = time.perf_counter()
+        for r in active:
+            tok = int(toks[r.slot])
+            r.out.append(tok)
+            r.qpos += 1
+            r.emit_times.append(now)
+            self.stats["tokens_emitted"] += 1
+            self._maybe_finish(r, tok)
+        self.stats["decode_ticks"] += 1
+
+    # -- main loop ------------------------------------------------------
+    def step(self) -> None:
+        """One engine tick: admit (+ prefill) then decode every slot."""
+        admitted = self.scheduler.admit()
+        if admitted:
+            self._prefill(admitted)
+        active = self.scheduler.active
+        if active:
+            self._decode_tick(active)
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drive until every submitted request finished."""
+        while not self.idle:
+            before = (self.stats["tokens_emitted"], len(self.scheduler.waiting))
+            self.step()
+            after = (self.stats["tokens_emitted"], len(self.scheduler.waiting))
+            if before == after:  # no progress: pool can never fit the head
+                head = self.scheduler.waiting[0]
+                raise RuntimeError(
+                    f"request {head.rid} needs "
+                    f"{self.scheduler.pages_needed(head)} pages but the "
+                    f"pool only has {self.page_pool.n_pages - 1}")
+        return {rid: r.out for rid, r in self.scheduler.requests.items()}

@@ -1,0 +1,104 @@
+"""Device-side pieces of the paged serving engine.
+
+Two jitted entry points, both donating the KV pools so the engine's
+resident cache memory is updated in place every call instead of being
+copied:
+
+* ``compiled_paged_step`` — one decode tick over the slot batch
+  (``transformer.decode_step_paged``), cached per (cfg, window, attention
+  backend) exactly like ``serve/decode._compiled_serve_step``.  The
+  cache-length BUCKET (the padded page-table width ``npp``) is a runtime
+  shape, so jit's own shape cache keys the per-bucket executables under
+  the lru entry; the engine quantizes ``npp`` (and the slot/prefill
+  batch shapes) to powers of two so that shape cache stays bounded.
+* ``insert_prefill`` — scatter a freshly prefilled contiguous ring cache
+  (``serve/decode.prefill`` with ``cache_len = npb * page_size``) into
+  the paged pools at each request's physical pages.  Cache positions at
+  or beyond a row's valid length are forced to -1 (right-padding and the
+  not-yet-decoded tail must never be attended), and logical pages beyond
+  a row's allocation are routed to the reserved trash page 0.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import attention_ops
+from repro.models import transformer as tf
+
+__all__ = ["next_pow2", "init_pools", "make_paged_step",
+           "compiled_paged_step", "insert_prefill"]
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (bucket quantizer for compile shapes)."""
+    return 1 << max(0, (int(n) - 1).bit_length())
+
+
+def init_pools(cfg: ArchConfig, n_pages: int, page_size: int) -> Dict:
+    """Paged KV pools in the serve compute dtype (same dtype the prefill
+    ring caches are collected in, so ``insert_prefill`` is a pure move)."""
+    return tf.init_paged_caches(cfg, n_pages, page_size,
+                                dtype=tf.cdtype(cfg))
+
+
+def make_paged_step(cfg: ArchConfig, *,
+                    window: Optional[int] = None) -> Callable:
+    def paged_step(params, pools, batch: Dict, qpos: jnp.ndarray,
+                   page_table: jnp.ndarray):
+        return tf.decode_step_paged(params, cfg, pools, batch, qpos,
+                                    page_table, window=window)
+
+    return paged_step
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_paged_step(cfg: ArchConfig, window: Optional[int],
+                         attn_impl: str) -> Callable:
+    """``pools`` is DONATED — rebind it from the step's return value."""
+    del attn_impl  # cache key only; the traced code reads the env var
+    return jax.jit(make_paged_step(cfg, window=window), donate_argnums=(1,))
+
+
+def compiled_paged_step(cfg: ArchConfig, *, window: Optional[int] = None,
+                        impl: Optional[str] = None) -> Callable:
+    return _compiled_paged_step(cfg, window,
+                                attention_ops.resolve_impl(impl))
+
+
+def _insert_prefill_impl(pools: Dict, caches: Dict,
+                         page_rows: jnp.ndarray,
+                         valid_len: jnp.ndarray) -> Dict:
+    b, npb = page_rows.shape
+
+    def insert_seg(pool_seg: Dict, cache_seg: Dict) -> Dict:
+        lb = cache_seg["pos"].shape[2]
+        pg = pool_seg["pos"].shape[2]
+        assert lb == npb * pg, (lb, npb, pg)
+        valid = jnp.arange(lb)[None, :] < valid_len[:, None]  # (B, Lb)
+        out = {}
+        for key, pool_leaf in pool_seg.items():
+            val = cache_seg[key]  # (n, B, Lb, ...)
+            if key == "pos":
+                val = jnp.where(valid[None], val, -1)
+            n = val.shape[0]
+            val = val.reshape((n, b, npb, pg) + val.shape[3:])
+            # (S, npb) fancy index on the page axis: pool[:, page_rows]
+            # is (n, B, npb, pg, ...) — one scatter per leaf moves the
+            # whole prefill into place.  Overlapping trash-page writes
+            # (page 0) carry pos = -1, so their race is unobservable.
+            out[key] = pool_leaf.at[:, page_rows].set(val)
+        return out
+
+    return {side: {seg: insert_seg(pools[side][seg], caches[side][seg])
+                   for seg in pools[side]}
+            for side in pools}
+
+
+# pools donated: the insert is an in-place scatter into the resident
+# pool buffers, not a copy of the whole pool per admission.
+insert_prefill = jax.jit(_insert_prefill_impl, donate_argnums=(0,))
