@@ -20,6 +20,13 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m benchmarks.run --fast --only roofline
 
+# Adaptive-wire smoke: codec A/B rows + the loss-vs-bytes curve on the
+# VLM connector boundary — asserts the entropy-sorted grouped plan
+# dominates static 2-bit (<= bytes, < CE); writes results/quant_curve.json
+# and BENCH_quant.json.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m benchmarks.run --fast --only quant
+
 # Serving-engine smoke: continuous-batching engine vs static-batch
 # generate on a mixed-length workload; writes BENCH_serve.json (tokens/s,
 # p50/p99 per-token latency) at the repo root.

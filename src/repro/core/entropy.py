@@ -60,9 +60,22 @@ def differential_entropy_bits(samples: jnp.ndarray,
     return ent, dict(bandwidth=h, sigma=sigma, n=n, grid=(lo, hi))
 
 
+#: Widest code the wire stack can carry: the bitstream packers, the
+#: quantizer grids (2^b levels in a uint8 index) and the Pallas codecs
+#: all top out at 8 bits — past that the payload would have to widen its
+#: index dtype, at which point shipping raw bf16 is cheaper anyway.
+MAX_WIRE_BITS = 8
+
+
 def optimal_bits(entropy_bits: float) -> int:
-    """ceil(H) per the source-coding bound; at least 1 bit."""
-    return max(1, int(np.ceil(entropy_bits)))
+    """ceil(H) per the source-coding bound, clamped to [1, 8].
+
+    The upper clamp is a contract with the wire stack: a heavy-tailed or
+    wide-range sample can push the KDE estimate past 8 bits, but no
+    packer or quantizer supports codes wider than ``MAX_WIRE_BITS`` —
+    an unclamped recommendation would crash the codec it feeds.
+    """
+    return min(MAX_WIRE_BITS, max(1, int(np.ceil(entropy_bits))))
 
 
 def discretized_entropy_bits(samples: jnp.ndarray, delta: float,
@@ -112,3 +125,166 @@ def estimate_optimal_bits(samples: jnp.ndarray,
         delta = float(diag["sigma"])
     h_disc = ent - math.log2(max(delta, 1e-30))
     return optimal_bits(h_disc), h_disc
+
+
+# ---------------------------------------------------------------------------
+# streaming per-channel entropy (the adaptive wire's online signal)
+# ---------------------------------------------------------------------------
+#
+# The KDE protocol above is an offline, per-tensor measurement (paper
+# Appendix A).  The adaptive wire needs the *per-channel* discretized
+# entropy, updated every training step, cheap enough to run next to the
+# codec: an EMA histogram per channel.  Samples are centered per channel
+# and binned in units of a shared reference scale sigma_ref (the EMA
+# tensor-level std), so the bin width is delta_bin = sigma_ref * SPAN /
+# n_bins and the readout at the codec-comparable bin width delta =
+# sigma_ref is
+#
+#     H_disc(delta = sigma_ref) ~= H(histogram) + log2(SPAN / n_bins)
+#
+# (the standard fine-quantization shift between two bin widths).  Like
+# `estimate_optimal_bits`, the estimate is invariant under a joint
+# rescaling of the tensor: sigma_ref absorbs the scale.  Channels whose
+# distributions are wide or multimodal RELATIVE to the tensor's scale
+# read high; near-constant channels read low (floored at 0) — exactly
+# the allocation signal feature-wise compression wants.
+
+_EMA_SPAN = 16.0  # histogram support: +-8 sigma_ref around the channel mean
+
+
+def init_entropy_ema(n_channels: int, n_bins: int = 64) -> dict:
+    """Fresh per-channel EMA-histogram state (cold: count == 0 adopts the
+    first batch outright, mirroring ``split.update_wire_calib``)."""
+    return dict(
+        hist=jnp.zeros((n_channels, n_bins), jnp.float32),
+        sigma=jnp.zeros((), jnp.float32),
+        count=jnp.zeros((), jnp.float32),
+    )
+
+
+def update_entropy_ema(state: dict, x: jnp.ndarray,
+                       decay: float = 0.9) -> dict:
+    """EMA-update the per-channel histograms with one activation batch.
+
+    ``x`` is (..., C); all leading axes are sample axes.  Pure jnp and
+    shape-static, so it jits (and can ride inside a compiled train step
+    or run host-side between steps).
+    """
+    n_bins = state["hist"].shape[1]
+    xf = x.astype(jnp.float32).reshape(-1, x.shape[-1])
+    sigma_b = jnp.std(xf) + 1e-12
+    sigma = jnp.where(state["count"] > 0.0,
+                      decay * state["sigma"] + (1.0 - decay) * sigma_b,
+                      sigma_b)
+    mu_c = jnp.mean(xf, axis=0, keepdims=True)
+    z = (xf - mu_c) / sigma  # channel-centered, tensor-scaled
+    idx = jnp.clip(jnp.floor((z + _EMA_SPAN / 2.0)
+                             * (n_bins / _EMA_SPAN)),
+                   0, n_bins - 1).astype(jnp.int32)
+    one_hot = jax.nn.one_hot(idx, n_bins, dtype=jnp.float32)
+    p_b = jnp.mean(one_hot, axis=0)  # (C, n_bins)
+    hist = jnp.where(state["count"] > 0.0,
+                     decay * state["hist"] + (1.0 - decay) * p_b,
+                     p_b)
+    return dict(hist=hist, sigma=sigma, count=state["count"] + 1.0)
+
+
+def entropy_ema_bits(state: dict) -> jnp.ndarray:
+    """(C,) per-channel discretized entropy at bin width sigma_ref.
+
+    Floored at 0 (a discrete entropy cannot be negative; the bin-width
+    shift can push degenerate channels below it).
+    """
+    p = state["hist"]
+    n_bins = p.shape[1]
+    h_hist = -jnp.sum(jnp.where(p > 0.0, p * jnp.log2(jnp.maximum(p, 1e-30)),
+                                0.0), axis=1)
+    shift = math.log2(_EMA_SPAN / n_bins)
+    return jnp.maximum(h_hist + shift, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# greedy water-filling bit allocation under a wire-byte budget
+# ---------------------------------------------------------------------------
+
+def allocate_bits(entropies, budget_bytes: float, *,
+                  group_size: int, scalars_per_channel: int,
+                  min_bits: int = 1, max_bits: int = MAX_WIRE_BITS
+                  ) -> Tuple[int, ...]:
+    """Per-group code widths under a total payload-byte budget.
+
+    ``entropies`` is the (C,) per-channel discretized-entropy signal
+    (:func:`entropy_ema_bits` or offline :func:`discretized_entropy_bits`
+    per channel); channels group contiguously into ``C / group_size``
+    groups (the same geometry ``QuantConfig.group_widths`` quantizes).
+    ``scalars_per_channel`` converts widths to wire bytes: one shipped
+    activation carries ``scalars_per_channel`` values of every channel
+    (e.g. ``B * S`` for a (B, S, C) boundary slab), so group g at width
+    w costs ``group_size * scalars_per_channel * w / 8`` payload bytes —
+    exact at every width, thanks to the bitstream packers.
+
+    Greedy water-filling (the mixed-precision tuning-ladder shape from
+    the neural-compressor exemplars): start every group at ``min_bits``,
+    then repeatedly grant +1 bit to the group with the largest remaining
+    source-coding deficit ``H_g - w_g`` while the budget allows.  Ties
+    break toward the lowest group index (deterministic plans — the jit
+    caches key on them).  Raises if even the all-``min_bits`` floor
+    exceeds the budget.
+    """
+    ent = np.asarray(entropies, np.float64).reshape(-1)
+    if ent.size % group_size != 0:
+        raise ValueError(
+            f"{ent.size} channels do not divide into groups of {group_size}")
+    h_group = ent.reshape(-1, group_size).mean(axis=1)
+    n_groups = h_group.shape[0]
+    bytes_per_bit = group_size * scalars_per_channel / 8.0
+    widths = np.full(n_groups, min_bits, np.int64)
+    spent = n_groups * min_bits * bytes_per_bit
+    if spent > budget_bytes:
+        raise ValueError(
+            f"budget {budget_bytes}B cannot cover the {min_bits}-bit floor "
+            f"({spent}B for {n_groups} groups)")
+    while spent + bytes_per_bit <= budget_bytes:
+        deficit = h_group - widths
+        deficit[widths >= max_bits] = -np.inf
+        g = int(np.argmax(deficit))
+        if not np.isfinite(deficit[g]) or deficit[g] <= 0.0:
+            break  # every group already meets its source-coding bound
+        widths[g] += 1
+        spent += bytes_per_bit
+    return tuple(int(w) for w in widths)
+
+
+def channel_order(entropies) -> Tuple[int, ...]:
+    """Entropy-ascending channel permutation (``QuantConfig.channel_perm``).
+
+    Contiguous grouping averages the per-channel entropy spread away:
+    a 1.7-bit channel-level spread collapses to ~0.3 bits between
+    averaged groups, and water-filling then has nothing to differentiate
+    on.  Sorting first makes each group entropy-homogeneous, so the
+    group means span the full channel range and the allocator's grants
+    (and starvations) land on channels that genuinely deserve them.
+    Deterministic: ties break by channel index (stable argsort).
+    """
+    ent = np.asarray(entropies, np.float64).reshape(-1)
+    return tuple(int(i) for i in np.argsort(ent, kind="stable"))
+
+
+def plan_grouped(entropies, budget_bytes: float, *,
+                 group_size: int, scalars_per_channel: int,
+                 min_bits: int = 1, max_bits: int = MAX_WIRE_BITS
+                 ) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Sorted-grouping allocation: returns ``(channel_perm, group_widths)``.
+
+    The permutation orders channels by ascending entropy; the widths are
+    :func:`allocate_bits` run on the SORTED signal, so width g applies to
+    the g-th entropy-ranked channel set once the codec gathers with the
+    permutation.  Drop both onto a ``QuantConfig`` to get the wire this
+    plan describes.
+    """
+    perm = channel_order(entropies)
+    ent_sorted = np.asarray(entropies, np.float64).reshape(-1)[list(perm)]
+    widths = allocate_bits(ent_sorted, budget_bytes, group_size=group_size,
+                           scalars_per_channel=scalars_per_channel,
+                           min_bits=min_bits, max_bits=max_bits)
+    return perm, widths

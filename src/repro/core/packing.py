@@ -1,59 +1,102 @@
-"""Exact b-bit integer packing into uint8 words.
+"""Exact b-bit integer packing into uint8 words, for every b in [1, 8].
 
 The paper transmits quantized indices ``I`` in {0, ..., 2^b - 1}.  On the wire
-(TPU ICI in our adaptation, TCP in the paper's) those must be *packed*: a 2-bit
-code stored in an int8 wastes 6 bits and would forfeit 3/4 of the promised
-communication saving.  This module implements exact, invertible packing for
-b in {1, 2, 4, 8}; 3-bit codes are transported in 4-bit slots (documented
-4/3 overhead, still 4x better than fp16).
+(TPU ICI in our adaptation, TCP in the paper's) those must be *packed*: a
+2-bit code stored in an int8 wastes 6 bits and would forfeit 3/4 of the
+promised communication saving.  This module implements exact, invertible
+*bitstream* packing for every width b in [1, 8]: code ``i`` occupies bits
+``[i*b, (i+1)*b)`` of the stream (LSB-first within each byte), so ``n``
+codes cost exactly ``ceil(n*b / 8)`` bytes — a 3-bit payload is 3/16 of
+bf16 on the wire, not the 4/16 the old slot-padded packers paid (odd
+widths used to ride the next power-of-two slot; that overhead is gone,
+which is what makes fine-grained per-group bit allocation worth its
+bytes).  For b in {1, 2, 4, 8} the layout is bit-identical to the old
+slot packing, so power-of-two payloads (including the Pallas kernels',
+which still pack per row at those widths) are unchanged.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-SUPPORTED_BITS = (1, 2, 4, 8)
+#: Widths the *fused Pallas kernels* pack natively (one code per
+#: power-of-two slot inside a byte).  The jnp bitstream packers below
+#: support every width in [1, 8] exactly; odd widths fall back to them.
+KERNEL_SLOT_BITS = (1, 2, 4, 8)
+
+# Backward-compatible alias: everything in [1, 8] is now supported.
+SUPPORTED_BITS = (1, 2, 3, 4, 5, 6, 7, 8)
+
+# Codes per packing group: groups of 8 codes span exactly ``bits`` whole
+# bytes, so the cross-byte bit arithmetic reduces to two reshapes.
+_GROUP = 8
+
+
+def _check_bits(bits: int) -> None:
+    if bits <= 0 or bits > 8:
+        raise ValueError(f"bits must be in [1, 8], got {bits}")
 
 
 def storage_bits(bits: int) -> int:
-    """Physical bits per code on the wire (3-bit rides in a 4-bit slot)."""
-    if bits <= 0 or bits > 8:
-        raise ValueError(f"bits must be in [1, 8], got {bits}")
-    for b in SUPPORTED_BITS:
+    """Physical bits per code in a *Pallas kernel slot* (next power of 2).
+
+    The bitstream packers in this module cost exactly ``bits`` physical
+    bits per code; this helper survives for the fused kernels, which pack
+    one code per power-of-two sub-byte slot (``kernels/ops.py``) — the
+    codec dispatch routes non-power-of-two widths to the jnp bitstream
+    path instead.
+    """
+    _check_bits(bits)
+    for b in KERNEL_SLOT_BITS:
         if bits <= b:
             return b
     raise AssertionError
 
 
 def packed_size(n: int, bits: int) -> int:
-    """Number of uint8 words needed for ``n`` codes of width ``bits``."""
-    b = storage_bits(bits)
-    per_word = 8 // b
-    return (n + per_word - 1) // per_word
+    """Number of uint8 words needed for ``n`` codes of width ``bits``.
+
+    Exact: ``ceil(n * bits / 8)`` — no slot padding at any width.
+    """
+    _check_bits(bits)
+    return (n * bits + 7) // 8
 
 
 def pack_bits(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
     """Pack a flat uint8 code array (values < 2**bits) into uint8 words.
 
-    Returns a 1-D uint8 array of length ``packed_size(codes.size, bits)``.
+    Returns a 1-D uint8 array of length ``packed_size(codes.size, bits)``;
+    code ``i`` occupies stream bits ``[i*bits, (i+1)*bits)``, LSB-first.
     """
-    b = storage_bits(bits)
-    per_word = 8 // b
+    _check_bits(bits)
     flat = codes.reshape(-1).astype(jnp.uint8)
     n = flat.shape[0]
-    pad = (-n) % per_word
+    pad = (-n) % _GROUP
     if pad:
         flat = jnp.pad(flat, (0, pad))
-    grouped = flat.reshape(-1, per_word)
-    shifts = jnp.arange(per_word, dtype=jnp.uint8) * b
-    words = (grouped << shifts).sum(axis=-1).astype(jnp.uint8)
-    return words
+    # (G, 8) codes -> (G, 8, bits) bits -> (G, bits, 8) byte lanes -> bytes
+    grouped = flat.reshape(-1, _GROUP)
+    code_shifts = jnp.arange(bits, dtype=jnp.uint8)
+    bit_lanes = (grouped[:, :, None] >> code_shifts) & jnp.uint8(1)
+    bit_lanes = bit_lanes.reshape(-1, bits, 8)
+    byte_shifts = jnp.arange(8, dtype=jnp.uint8)
+    words = (bit_lanes << byte_shifts).sum(axis=-1).astype(jnp.uint8)
+    # zero-padded codes only ever populate the tail bytes past the exact
+    # bitstream length, so slicing to packed_size loses nothing
+    return words.reshape(-1)[: packed_size(n, bits)]
 
 
 def unpack_bits(words: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
     """Inverse of :func:`pack_bits`; returns the first ``n`` codes (uint8)."""
-    b = storage_bits(bits)
-    per_word = 8 // b
-    shifts = jnp.arange(per_word, dtype=jnp.uint8) * b
-    mask = jnp.uint8((1 << b) - 1)
-    codes = (words[:, None] >> shifts) & mask
+    _check_bits(bits)
+    flat = words.reshape(-1)
+    n_groups = (n + _GROUP - 1) // _GROUP
+    pad = n_groups * bits - flat.shape[0]
+    if pad > 0:
+        flat = jnp.pad(flat, (0, pad))
+    byte_shifts = jnp.arange(8, dtype=jnp.uint8)
+    bit_lanes = (flat.reshape(-1, bits)[:, :, None] >> byte_shifts) \
+        & jnp.uint8(1)
+    bit_lanes = bit_lanes.reshape(-1, 8, bits)
+    code_shifts = jnp.arange(bits, dtype=jnp.uint8)
+    codes = (bit_lanes << code_shifts).sum(axis=-1).astype(jnp.uint8)
     return codes.reshape(-1)[:n]

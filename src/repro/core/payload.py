@@ -71,6 +71,51 @@ class CommPayload:
         return tuple(out)
 
 
-def bits_per_scalar(payload: CommPayload, n_scalars: int) -> float:
-    """Average transmitted bits per original activation scalar (Table 2)."""
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GroupedPayload:
+    """Mixed-precision wire form: one sub-payload per channel group.
+
+    The adaptive wire (ROADMAP item 3) splits the boundary activation's
+    channel axis into contiguous groups and quantizes each at its own bit
+    width (``QuantConfig.group_widths``).  What crosses the link is the
+    concatenation of the groups' ``CommPayload``s — each with its own
+    packed codes and scale side-info, each exactly
+    ``ceil(n_group * width / 8)`` data bytes thanks to the exact
+    bitstream packers.  ``meta`` (static, session-handshake) records the
+    group geometry so the server can reassemble the channel axis.
+
+    Like :class:`CommPayload`, ``wire_bytes`` is computed from static
+    shapes only, so a grouped wire's byte cost stays a compile-time
+    constant (what the HLO collective-permute assertions check).
+    """
+
+    groups: Tuple[CommPayload, ...]
+    meta: Dict[str, Any] = dataclasses.field(
+        default_factory=dict, metadata=dict(static=True)
+    )
+
+    def wire_bytes(self) -> int:
+        """Total bytes on the wire: the sum over group payloads."""
+        return sum(g.wire_bytes() for g in self.groups)
+
+    def arrays(self) -> Tuple[jnp.ndarray, ...]:
+        out: Tuple[jnp.ndarray, ...] = ()
+        for g in self.groups:
+            out += g.arrays()
+        return out
+
+    @property
+    def widths(self) -> Tuple[int, ...]:
+        return tuple(self.meta.get("widths", ()))
+
+
+def bits_per_scalar(payload, n_scalars: int) -> float:
+    """Average transmitted bits per original activation scalar (Table 2).
+
+    Exact for every payload: packing is a true bitstream at all widths
+    1-8 (odd widths no longer pay a power-of-two slot), so this is
+    ``bits + side-info`` rather than ``storage-slot + side-info``.
+    Accepts :class:`CommPayload` and :class:`GroupedPayload` alike.
+    """
     return payload.wire_bytes() * 8.0 / float(n_scalars)

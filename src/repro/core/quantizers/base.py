@@ -34,6 +34,29 @@ payload always decodes with the backend that produced it, so the two
 sides of the wire never disagree about the packed layout.  ``roundtrip``
 is always the jnp/STE path (it must be differentiable; the kernels are
 encode/decode only).
+
+Grouped mixed precision (ROADMAP item 3): a ``QuantConfig`` whose
+``group_widths`` is non-empty is an *allocation plan* — the channel
+(last) axis splits into equal contiguous groups, group g quantized at
+``group_widths[g]`` bits with its own scale statistics.  All three
+entry points transparently take the grouped path
+(:func:`encode_grouped` / :func:`decode_grouped` /
+:func:`roundtrip_grouped`), producing/consuming a
+:class:`~repro.core.payload.GroupedPayload`; each group dispatches
+through the backend registry independently (mixed Pallas/jnp groups are
+fine — every sub-payload self-describes).
+
+A plan may additionally carry ``channel_perm``: the encoder gathers the
+channel axis into that order before grouping and the decoder scatters
+it back, so "groups" are arbitrary channel SETS, not just contiguous
+ranges.  An entropy-sorted permutation concentrates the per-channel
+spread into between-group spread — the allocator then starves the
+genuinely low-information groups and (when the deficit warrants)
+widens the high-information ones, which contiguous grouping averages
+away.  Like the widths, the permutation is plan metadata synced out of
+band at re-plan time (both wire endpoints hold the same
+``QuantConfig``): it costs zero payload bytes, and ``wire_bytes()`` is
+unchanged by it.
 """
 from __future__ import annotations
 
@@ -43,7 +66,7 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.payload import CommPayload
+from repro.core.payload import CommPayload, GroupedPayload
 from repro.utils.dispatch import resolve_backend_impl
 
 _VALID_IMPLS = ("pallas", "jnp")
@@ -66,10 +89,37 @@ class QuantConfig:
     rand_frac: float = 0.25  # fraction of the budget spent on random picks
     # --- shared ---
     stats_axis: str = "sample"  # 'sample' (per batch row) | 'tensor'
+    # --- grouped mixed precision (the adaptive wire's allocation plan) ---
+    # Non-empty: the channel (last) axis splits into len(group_widths)
+    # contiguous equal groups; group g is quantized at group_widths[g]
+    # bits with its OWN scale statistics, and the wire form becomes a
+    # GroupedPayload.  Empty: the static single-width wire (``bits``).
+    # A tuple on a frozen dataclass, so a plan is hashable — jit caches
+    # (and the schedulers' cached update fns) key on it directly.
+    group_widths: Tuple[int, ...] = ()
+    # Optional channel gather order applied before grouping (and inverted
+    # after reassembly): entropy-sorted grouping.  Plan metadata, not
+    # payload content — zero wire bytes.  Empty = identity.
+    channel_perm: Tuple[int, ...] = ()
 
     @property
     def levels(self) -> int:
         return 2 ** self.bits
+
+    @property
+    def grouped(self) -> bool:
+        return bool(self.group_widths)
+
+    def group_cfgs(self) -> Tuple["QuantConfig", ...]:
+        """One ungrouped per-group config (bits = that group's width)."""
+        return tuple(dataclasses.replace(self, bits=w, group_widths=())
+                     for w in self.group_widths)
+
+    def mean_bits(self) -> float:
+        """Average code width per scalar (equal groups)."""
+        if not self.group_widths:
+            return float(self.bits)
+        return sum(self.group_widths) / len(self.group_widths)
 
 
 _ENCODERS: Dict[str, Callable] = {}
@@ -106,16 +156,116 @@ def resolve_impl(impl: Optional[str] = None) -> str:
                                 _VALID_IMPLS)
 
 
+def _group_splits(cfg: QuantConfig, d: int) -> int:
+    """Validate the plan against the channel axis; returns group size."""
+    g = len(cfg.group_widths)
+    if d % g != 0:
+        raise ValueError(
+            f"channel axis {d} does not divide into {g} groups")
+    bad = [w for w in cfg.group_widths if not 1 <= w <= 8]
+    if bad:
+        raise ValueError(f"group widths must be in [1, 8]: {bad}")
+    return d // g
+
+
+def _group_rngs(rng: Optional[jax.Array], n: int):
+    if rng is None:
+        return (None,) * n
+    return tuple(jax.random.split(rng, n))
+
+
+def _apply_perm(cfg: QuantConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Gather the channel axis into plan order (identity if unset)."""
+    if not cfg.channel_perm:
+        return x
+    if len(cfg.channel_perm) != x.shape[-1]:
+        raise ValueError(
+            f"channel_perm has {len(cfg.channel_perm)} entries for a "
+            f"{x.shape[-1]}-channel axis")
+    return jnp.take(x, jnp.asarray(cfg.channel_perm), axis=-1)
+
+
+def _invert_perm(cfg: QuantConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Scatter the reassembled channel axis back to wire order."""
+    if not cfg.channel_perm:
+        return x
+    inv = sorted(range(len(cfg.channel_perm)),
+                 key=cfg.channel_perm.__getitem__)
+    return jnp.take(x, jnp.asarray(inv), axis=-1)
+
+
+def encode_grouped(cfg: QuantConfig, x: jnp.ndarray,
+                   rng: Optional[jax.Array] = None,
+                   impl: Optional[str] = None) -> GroupedPayload:
+    """Grouped mixed-precision wire form: slice the channel (last) axis
+    into equal contiguous groups and encode each at its planned width.
+
+    Each group payload carries its own scale statistics (computed over
+    the group only — per-group normalization is itself most of the
+    adaptive win: one outlier channel no longer dilates every channel's
+    grid), and each group dispatches through the backend registry
+    independently, so power-of-two groups may take the fused Pallas
+    kernels while odd widths take the exact jnp bitstream path.
+    """
+    gs = _group_splits(cfg, x.shape[-1])
+    x = _apply_perm(cfg, x)
+    groups = []
+    for i, (sub_cfg, r) in enumerate(zip(cfg.group_cfgs(),
+                                         _group_rngs(rng,
+                                                     len(cfg.group_widths)))):
+        xg = jax.lax.slice_in_dim(x, i * gs, (i + 1) * gs, axis=x.ndim - 1)
+        groups.append(encode(sub_cfg, xg, r, impl))
+    return GroupedPayload(
+        groups=tuple(groups),
+        meta=dict(method=cfg.method, widths=tuple(cfg.group_widths),
+                  group_size=gs, shape=tuple(x.shape), dtype=str(x.dtype),
+                  permuted=bool(cfg.channel_perm)),
+    )
+
+
+def decode_grouped(cfg: QuantConfig, payload: GroupedPayload) -> jnp.ndarray:
+    """Reassemble the channel axis from the per-group reconstructions."""
+    parts = [decode(sub_cfg, g)
+             for sub_cfg, g in zip(cfg.group_cfgs(), payload.groups)]
+    return _invert_perm(cfg, jnp.concatenate(parts, axis=-1))
+
+
+def roundtrip_grouped(cfg: QuantConfig, x: jnp.ndarray,
+                      rng: Optional[jax.Array] = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Differentiable (STE) grouped roundtrip — jnp stays the oracle.
+
+    The aux (commitment) loss is the mean over groups, matching the
+    ungrouped loss scale for equal-size groups.
+    """
+    gs = _group_splits(cfg, x.shape[-1])
+    x = _apply_perm(cfg, x)
+    parts, auxes = [], []
+    for i, (sub_cfg, r) in enumerate(zip(cfg.group_cfgs(),
+                                         _group_rngs(rng,
+                                                     len(cfg.group_widths)))):
+        xg = jax.lax.slice_in_dim(x, i * gs, (i + 1) * gs, axis=x.ndim - 1)
+        xh, aux = _ROUNDTRIPS[cfg.method](sub_cfg, xg, r)
+        parts.append(xh)
+        auxes.append(aux)
+    x_hat = _invert_perm(cfg, jnp.concatenate(parts, axis=-1))
+    return x_hat, jnp.mean(jnp.stack(auxes))
+
+
 def encode(cfg: QuantConfig, x: jnp.ndarray,
            rng: Optional[jax.Array] = None,
-           impl: Optional[str] = None) -> CommPayload:
+           impl: Optional[str] = None):
+    if cfg.grouped:
+        return encode_grouped(cfg, x, rng, impl)
     fn = _BACKEND_ENCODERS.get((cfg.method, resolve_impl(impl)))
     if fn is not None:
         return fn(cfg, x, rng)
     return _ENCODERS[cfg.method](cfg, x, rng)
 
 
-def decode(cfg: QuantConfig, payload: CommPayload) -> jnp.ndarray:
+def decode(cfg: QuantConfig, payload) -> jnp.ndarray:
+    if isinstance(payload, GroupedPayload):
+        return decode_grouped(cfg, payload)
     fn = _BACKEND_DECODERS.get((cfg.method,
                                 payload.meta.get("impl", "jnp")))
     if fn is not None:
@@ -126,6 +276,8 @@ def decode(cfg: QuantConfig, payload: CommPayload) -> jnp.ndarray:
 def roundtrip(cfg: QuantConfig, x: jnp.ndarray,
               rng: Optional[jax.Array] = None
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if cfg.grouped:
+        return roundtrip_grouped(cfg, x, rng)
     return _ROUNDTRIPS[cfg.method](cfg, x, rng)
 
 

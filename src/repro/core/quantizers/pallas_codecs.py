@@ -20,8 +20,14 @@ by the backend that produced it — ``meta['impl']`` travels in the static
 session handshake, never on the wire.
 
 Configs the kernels do not cover (``stats_axis='tensor'``, NF block
-sizes that straddle packed words) fall back to the jnp oracle encoder,
-whose payloads self-describe via the missing ``impl`` tag.
+sizes that straddle packed words, non-power-of-two widths — the kernels
+pack one code per sub-byte slot, while the exact cross-byte bitstream
+layout for odd widths lives in the jnp packers) fall back to the jnp
+oracle encoder, whose payloads self-describe via the missing ``impl``
+tag.  Grouped mixed-precision payloads dispatch per group ABOVE this
+registry (``base.encode_grouped``), so a grouped wire mixes backends
+freely: power-of-two groups take the kernels, odd-width groups take the
+jnp bitstream.
 """
 from __future__ import annotations
 
@@ -30,7 +36,7 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-from repro.core.packing import storage_bits
+from repro.core.packing import KERNEL_SLOT_BITS, storage_bits
 from repro.core.payload import CommPayload
 from repro.core.quantizers import base, nf, rdfsq
 from repro.kernels import ops
@@ -44,6 +50,8 @@ def _rdfsq_encode(cfg: base.QuantConfig, x: jnp.ndarray,
                   rng: Optional[jnp.ndarray] = None) -> CommPayload:
     if cfg.stats_axis != "sample" or x.ndim < 2:
         return rdfsq.encode(cfg, x, rng)  # kernel stats are per sample row
+    if cfg.bits not in KERNEL_SLOT_BITS:
+        return rdfsq.encode(cfg, x, rng)  # odd widths: exact jnp bitstream
     words, stats = ops.rdfsq_quantize(x, cfg.bits, cfg.clip_sigma)
     return CommPayload(
         data=words,
@@ -68,6 +76,8 @@ def _rdfsq_decode(cfg: base.QuantConfig, payload: CommPayload) -> jnp.ndarray:
 
 def _nf_encode(cfg: base.QuantConfig, x: jnp.ndarray,
                rng: Optional[jnp.ndarray] = None) -> CommPayload:
+    if cfg.bits not in KERNEL_SLOT_BITS:
+        return nf.encode(cfg, x, rng)  # odd widths: exact jnp bitstream
     if cfg.block_size % (8 // storage_bits(cfg.bits)) != 0:
         return nf.encode(cfg, x, rng)  # rows would straddle packed words
     words, scales, aux = ops.nf_quantize(

@@ -63,6 +63,21 @@ class SplitConfig:
                 f"{n_cuts} cuts ({self.n_stages} stages)")
         return tuple(self.stage_quants)
 
+    def with_plans(self, plans: Tuple[Tuple[int, ...], ...]) -> "SplitConfig":
+        """The same topology carrying new per-cut allocation plans.
+
+        ``plans[c]`` becomes cut c's ``group_widths`` (an empty tuple
+        reverts that cut to its static width).  Returns a new frozen
+        config, so the trainers' jit caches key on the plan for free.
+        """
+        quants = self.resolve_stage_quants()
+        if len(plans) != len(quants):
+            raise ValueError(
+                f"{len(plans)} plans for {len(quants)} cuts")
+        return dataclasses.replace(self, stage_quants=tuple(
+            dataclasses.replace(q, group_widths=tuple(p))
+            for q, p in zip(quants, plans)))
+
 
 # ---------------------------------------------------------------------------
 # learnable linear codec (Figure 2 client encoder / server decoder)
@@ -223,6 +238,28 @@ class WireLink:
     def perm(self) -> Tuple[Tuple[int, int], ...]:
         return ((self.src, self.dst),)
 
+    @property
+    def plan(self) -> Tuple[int, ...]:
+        """The link's bit-allocation plan (empty = static single width)."""
+        return tuple(self.quant.group_widths)
+
+    def with_plan(self, widths: Tuple[int, ...],
+                  perm: Tuple[int, ...] = ()) -> "WireLink":
+        """The same link carrying a new allocation plan.
+
+        Plans live on the forward ``QuantConfig`` (``group_widths`` plus
+        the optional sorted-grouping ``channel_perm``), so a re-planned
+        link hashes differently — the schedulers' jit caches recompile
+        (or cache-hit) per plan with no extra plumbing.  The backward
+        quant is untouched: the paper scopes compression to the forward
+        wire, and the adaptive signal (boundary activation entropy) says
+        nothing about the cotangent distribution.
+        """
+        return dataclasses.replace(
+            self, quant=dataclasses.replace(self.quant,
+                                            group_widths=tuple(widths),
+                                            channel_perm=tuple(perm)))
+
     def ship(self, x: jnp.ndarray, axis_name: str = "pod") -> jnp.ndarray:
         """The real wire: encode -> ppermute src->dst -> decode."""
         return quantized_ship(self.quant, x, axis_name, self.perm,
@@ -332,6 +369,18 @@ class HubConfig:
                               bwd_quant=self.bwd_quant, client=c)
                      for c, q in enumerate(self.resolve_client_quants()))
 
+    def with_plans(self, plans: Tuple[Tuple[int, ...], ...]) -> "HubConfig":
+        """The same hub carrying new per-client allocation plans
+        (``plans[c]`` -> client c's ``group_widths``; empty reverts to
+        that client's static width)."""
+        quants = self.resolve_client_quants()
+        if len(plans) != len(quants):
+            raise ValueError(
+                f"{len(plans)} plans for {len(quants)} clients")
+        return dataclasses.replace(self, client_quants=tuple(
+            dataclasses.replace(q, group_widths=tuple(p))
+            for q, p in zip(quants, plans)))
+
 
 # ---------------------------------------------------------------------------
 # per-client quantizer calibration state
@@ -417,8 +466,15 @@ def wire_payload(cfg: SplitConfig, params: Optional[Dict], x: jnp.ndarray,
 
 
 def analytic_bits_per_scalar(q: QuantConfig, h_dim: int) -> float:
-    """Paper Table 2 closed forms."""
+    """Paper Table 2 closed forms.
+
+    A grouped plan's analytic rate is the width averaged over equal
+    channel groups — exact, because the bitstream packers charge every
+    width its true cost (3-bit groups cost 3 bits, not a 4-bit slot).
+    """
     if q.method in ("fsq", "rdfsq", "nf"):
+        if q.grouped:
+            return q.mean_bits()
         return float(q.bits)
     if q.method == "topk":
         from repro.core.quantizers.topk import budget

@@ -6,12 +6,40 @@ exact-match against these.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.packing import pack_bits, storage_bits, unpack_bits
+from repro.core.packing import storage_bits
 
 _EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# kernel slot packing
+# ---------------------------------------------------------------------------
+#
+# The fused kernels pack one code per power-of-two sub-byte slot
+# (``storage_bits``) — NOT the exact cross-byte bitstream the wire
+# payloads use (``core.packing.pack_bits``).  These oracles mirror the
+# kernel layout; the codec dispatch converts to the exact bitstream at
+# the payload boundary for non-power-of-two widths.
+
+def _pack_slots(codes2d: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(R, C) codes -> (R, C / per) uint8 words, per-slot shift-or."""
+    sb = storage_bits(bits)
+    per = 8 // sb
+    r, c = codes2d.shape
+    grouped = codes2d.astype(jnp.uint8).reshape(r, c // per, per)
+    shifts = (jnp.arange(per, dtype=jnp.uint8) * sb)[None, None, :]
+    return (grouped << shifts).sum(axis=-1).astype(jnp.uint8)
+
+
+def _unpack_slots(words: jnp.ndarray, bits: int, c: int) -> jnp.ndarray:
+    """Inverse of :func:`_pack_slots`: (R, C / per) words -> (R, C)."""
+    sb = storage_bits(bits)
+    per = 8 // sb
+    shifts = (jnp.arange(per, dtype=jnp.uint8) * sb)[None, None, :]
+    mask = jnp.uint8((1 << sb) - 1)
+    return ((words[..., None] >> shifts) & mask).reshape(words.shape[0], c)
 
 
 # ---------------------------------------------------------------------------
@@ -43,20 +71,16 @@ def rdfsq_codes_ref(x2d: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
 
 
 def rdfsq_quantize_ref(x2d, lo, hi, bits: int) -> jnp.ndarray:
-    """Packed uint8 words, row-major packing per row: (R, C*b/8)."""
+    """Packed uint8 words in kernel slot layout: (R, C / per)."""
     codes = rdfsq_codes_ref(x2d, lo, hi, bits)
-    r, c = codes.shape
-    per = 8 // storage_bits(bits)
-    return jax.vmap(lambda row: pack_bits(row, bits))(codes).reshape(
-        r, c // per)
+    return _pack_slots(codes, bits)
 
 
 def rdfsq_dequantize_ref(packed: jnp.ndarray, lo, hi, bits: int,
                          n_cols: int) -> jnp.ndarray:
     d = 2 ** bits
     half = (d - 1) / 2.0
-    r = packed.shape[0]
-    codes = jax.vmap(lambda row: unpack_bits(row, bits, n_cols))(packed)
+    codes = _unpack_slots(packed, bits, n_cols)
     cvals = (codes.astype(jnp.float32) - half) / half
     return (cvals + 1.0) / 2.0 * (hi - lo) + lo
 
@@ -79,15 +103,11 @@ def nf_codes_ref(blocks: jnp.ndarray, book: jnp.ndarray):
 
 def nf_quantize_ref(blocks, book, bits: int):
     codes, m, rng = nf_codes_ref(blocks, book)
-    nb, g = codes.shape
-    per = 8 // storage_bits(bits)
-    packed = jax.vmap(lambda row: pack_bits(row, bits))(codes).reshape(
-        nb, g // per)
-    return packed, m, rng
+    return _pack_slots(codes, bits), m, rng
 
 
 def nf_dequantize_ref(packed, m, rng, book, bits: int,
                       g: int) -> jnp.ndarray:
-    codes = jax.vmap(lambda row: unpack_bits(row, bits, g))(packed)
+    codes = _unpack_slots(packed, bits, g)
     norm = book.astype(jnp.float32)[codes]
     return (norm + 1.0) / 2.0 * rng + m

@@ -61,6 +61,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.core import entropy as entropy_mod
 from repro.core import quantizers
 from repro.core.quantizers import QuantConfig
 from repro.core.split import (HubConfig, SplitConfig, WireLink, group_links,
@@ -90,10 +91,13 @@ def _link_bytes(links: Tuple[WireLink, ...], x_sds,
     for link in links:
         f = link.fwd_wire_bytes(x_sds)
         b = link.bwd_wire_bytes(x_sds)
-        table[(link.src, link.dst)] = dict(fwd=f * data_shards,
-                                           bwd=b * data_shards,
-                                           quant=link.quant.method,
-                                           bits=link.quant.bits)
+        # grouped plans report their widths tuple (the per-group bit
+        # allocation); static links report the single width — both render
+        # in the dry-run link tables and key the byte assertions
+        table[(link.src, link.dst)] = dict(
+            fwd=f * data_shards, bwd=b * data_shards,
+            quant=link.quant.method,
+            bits=(link.plan if link.quant.grouped else link.quant.bits))
         fwd_slice.append(f)
         bwd_slice.append(b)
     return dict(
@@ -152,6 +156,62 @@ def pod_link_bytes(pair_bytes: Dict[Tuple[int, int], int], mesh,
         key = (pod_of[a], pod_of[b])
         out[key] = out.get(key, 0) + v
     return out
+
+
+# ---------------------------------------------------------------------------
+# entropy-adaptive re-planning (between compiled steps)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnums=(0, 3))
+def boundary_probe(cfg: ArchConfig, params: Dict, tokens: jnp.ndarray,
+                   stage: int = 0) -> jnp.ndarray:
+    """Host-side probe of one stage's boundary activation (what its
+    outgoing wire link ships): embed + that stage's block stack on a
+    (B, S) token microbatch.  Runs OUTSIDE the shard_map schedules, on
+    replicated parameters, between compiled steps — the adaptive wire's
+    entropy signal is a statistic, so a single-microbatch replicated
+    probe is enough (and keeps the compiled step plan-static).
+    """
+    blocks = jax.tree_util.tree_map(lambda a: a[stage], params["blocks"])
+    x = embed_tokens(cfg, params, tokens, tf.cdtype(cfg))
+    positions = jnp.arange(tokens.shape[-1], dtype=jnp.int32)
+    return run_blocks(cfg, blocks, x, positions)
+
+
+def replan_widths(ema_state: Dict, budget_bytes: float, *, n_groups: int,
+                  scalars_per_channel: int,
+                  min_bits: int = 1) -> Tuple[int, ...]:
+    """One re-planning decision: EMA entropy readout -> greedy allocation.
+
+    ``budget_bytes`` budgets the CODE bytes of one shipped activation
+    slice (scale side-info rides on top — it is identical across plans
+    of the same group count, so it cancels out of plan comparisons).
+    Deterministic for a given state, so repeated calls with an unchanged
+    signal return the same plan and the jit caches keyed on it hit.
+    """
+    ent = entropy_mod.entropy_ema_bits(ema_state)
+    group_size = ent.shape[0] // n_groups
+    return entropy_mod.allocate_bits(
+        ent, budget_bytes, group_size=group_size,
+        scalars_per_channel=scalars_per_channel, min_bits=min_bits)
+
+
+def replan_grouped(ema_state: Dict, budget_bytes: float, *, n_groups: int,
+                   scalars_per_channel: int, min_bits: int = 1
+                   ) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Sorted-grouping re-plan: ``(channel_perm, group_widths)``.
+
+    Like :func:`replan_widths` but channels are gathered into ascending
+    entropy order before grouping (``QuantConfig.channel_perm``), which
+    keeps the per-channel spread visible to the allocator instead of
+    averaging it into near-uniform group means.  Use this on boundaries
+    with real channel heterogeneity (e.g. the VLM connector wire).
+    """
+    ent = entropy_mod.entropy_ema_bits(ema_state)
+    group_size = ent.shape[0] // n_groups
+    return entropy_mod.plan_grouped(
+        ent, budget_bytes, group_size=group_size,
+        scalars_per_channel=scalars_per_channel, min_bits=min_bits)
 
 
 # ---------------------------------------------------------------------------

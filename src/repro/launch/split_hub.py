@@ -121,7 +121,10 @@ def train_hub(cfg: ArchConfig, hub: HubConfig, opt_cfg: AdamWConfig,
               micro_batch: int, seq: int, mode: str = "lockstep",
               mesh=None, n_micro: int = 1, n_ticks: Optional[int] = None,
               params: Optional[Dict] = None, warmup_steps: int = 0,
-              total_steps: int = 0, seed: int = 0) -> Dict:
+              total_steps: int = 0, seed: int = 0,
+              wire_budget_bytes: Optional[float] = None,
+              plan_groups: int = 8, replan_every: int = 1,
+              plan_log: Optional[List] = None) -> Dict:
     """Train the N-client hub.
 
     ``mode="lockstep"``: every client ships every tick on the SPMD mesh
@@ -136,11 +139,23 @@ def train_hub(cfg: ArchConfig, hub: HubConfig, opt_cfg: AdamWConfig,
     yields (N, B, S) candidate microbatches, one per global tick
     (``n_ticks`` of them).  Mesh-free (in-graph wire form).  Returns
     dict(state, history, masks, quant_rel_err).
+
+    Entropy-adaptive wire (lockstep only): ``wire_budget_bytes`` turns
+    on per-client re-planning between compiled steps — each client's
+    boundary activation feeds its OWN per-channel entropy EMA (clients
+    have different data distributions; their plans must stay isolated,
+    like their codec calibration), and each link gets its own
+    ``plan_groups``-group width plan under the shared per-link budget.
+    Plans live on the clients' ``QuantConfig.group_widths``, so the
+    update cache compiles once per distinct plan vector.  ``plan_log``
+    receives (step, plans) tuples on change.
     """
     if mode == "lockstep":
+        from repro.core import entropy as entropy_mod
         from repro.train.loop import TrainState
 
         assert mesh is not None, "lockstep mode needs the hub mesh"
+        adaptive = wire_budget_bytes is not None
         update = _cached_hub_update(cfg, mesh, hub, opt_cfg, n_micro,
                                     micro_batch, seq, warmup_steps,
                                     total_steps)
@@ -149,11 +164,34 @@ def train_hub(cfg: ArchConfig, hub: HubConfig, opt_cfg: AdamWConfig,
         state = TrainState(params=params,
                            opt=init_opt_state(params, opt_cfg),
                            step=jnp.zeros((), jnp.int32))
+        n = hub.n_clients
+        emas = ([entropy_mod.init_entropy_ema(cfg.d_model)
+                 for _ in range(n)] if adaptive else None)
+        scalars_per_ch = (micro_batch // mesh.shape["data"]) * seq
+        plans: Tuple[Tuple[int, ...], ...] = ((),) * n
         history: List[float] = []
         per_client = None
         wire_b = 0.0
         with mesh:
-            for tokens, labels in batches:
+            for step_i, (tokens, labels) in enumerate(batches):
+                if adaptive and step_i % max(replan_every, 1) == 0:
+                    new_plans = []
+                    for c in range(n):
+                        h = schedules.boundary_probe(cfg, state.params,
+                                                     tokens[0, c], c)
+                        emas[c] = entropy_mod.update_entropy_ema(emas[c], h)
+                        new_plans.append(schedules.replan_widths(
+                            emas[c], wire_budget_bytes,
+                            n_groups=plan_groups,
+                            scalars_per_channel=scalars_per_ch))
+                    if tuple(new_plans) != plans:
+                        plans = tuple(new_plans)
+                        if plan_log is not None:
+                            plan_log.append((step_i, plans))
+                        hub = hub.with_plans(plans)
+                        update = _cached_hub_update(
+                            cfg, mesh, hub, opt_cfg, n_micro, micro_batch,
+                            seq, warmup_steps, total_steps)
                 state, loss, pc, wb = update(state, tokens, labels)
                 history.append(float(loss))
                 per_client = np.asarray(pc)
@@ -275,6 +313,149 @@ def dryrun_parity(arch: str = "llama3_2_3b", n_micro: int = 3,
                 diff=diff)
 
 
+def dryrun_hub_grouped(arch: str = "llama3_2_3b", n_clients: int = 3,
+                       n_micro: int = 3, micro_batch: int = 4,
+                       seq: int = 16) -> Dict:
+    """Grouped mixed-precision hub links, HLO-asserted per client.
+
+    Client 0 ships a uniform 3-bit grouped FSQ plan (pure code bytes —
+    must cost exactly 3/16 of the identity bf16 wire), client 1 the
+    identity wire (the 16-bit reference on the same topology), and the
+    remaining clients adaptive-shaped mixed-width RD-FSQ plans.  Every
+    link's static ``GroupedPayload`` bytes are asserted against the HLO
+    collective-permute traffic of that link's device pairs, within 1%.
+    """
+    from repro.configs import get_config
+    from repro.launch.split_pipeline import assert_links_match_hlo
+
+    cfg = get_config(arch).reduced()
+    assert cfg.d_model % 8 == 0, cfg.d_model
+    quants = [QuantConfig(method="fsq", group_widths=(3,) * 8),
+              QuantConfig(method="identity")]
+    quants += [QuantConfig(method="rdfsq", group_widths=(1, 2, 3, 8))
+               for _ in range(n_clients - 2)]
+    hub = HubConfig(n_clients=n_clients, client_quants=tuple(quants))
+    mesh = hub_mesh(n_clients)
+    params_sds = jax.eval_shape(
+        lambda: init_hub_params(jax.random.PRNGKey(0), cfg, hub))
+    tok_sds = jax.ShapeDtypeStruct(
+        (n_micro, n_clients, micro_batch, seq), jnp.int32)
+    n_ticks = n_micro + 1
+
+    step = build_hub_step(cfg, mesh, hub, n_micro, micro_batch, seq)
+    with mesh:
+        compiled = jax.jit(step).lower(params_sds, tok_sds,
+                                       tok_sds).compile()
+    hlo = compiled.as_text()
+    wire = hub_wire_bytes(cfg, hub, micro_batch, seq,
+                          data_shards=mesh.shape["data"])
+    assert_links_match_hlo(f"hub grouped {arch} N={n_clients}", hlo, mesh,
+                           wire, n_ticks)
+    links = wire["links"]
+    ratio = (links[(0, hub.server_stage)]["fwd"]
+             / links[(1, hub.server_stage)]["fwd"])
+    print(f"[split-hub grouped] 3-bit/bf16 link ratio {ratio:.6f} "
+          f"(exact 3/16 = {3 / 16:.6f})")
+    assert abs(ratio - 3.0 / 16.0) < 0.01 * (3.0 / 16.0), ratio
+    return dict(
+        wire_links={f"{s}->{d}": v["fwd"] for (s, d), v in links.items()},
+        ratio_3bit=ratio,
+    )
+
+
+def dryrun_parity_grouped(arch: str = "llama3_2_3b", n_micro: int = 3,
+                          micro_batch: int = 4, seq: int = 16,
+                          tol: float = 3e-6) -> Dict:
+    """The identity plan: a single-group grouped wire IS the static wire.
+
+    ``group_widths=(2,)`` slices the channel axis into one group whose
+    scale statistics cover the whole tensor — numerically the static
+    2-bit codec, shipped as a 1-group ``GroupedPayload``.  The hub(N=1)
+    loss under that plan must match the monolithic static-2-bit pipeline
+    loss to ``tol`` — the refactor's no-behavior-change anchor.
+    """
+    from repro.launch import split_pipeline as sp
+    from repro.train.losses import IGNORE
+
+    cfg = sp._homogeneous_cfg(arch, reduced=True, n_stages=2)
+    q_static = QuantConfig(method="rdfsq", bits=2)
+    q_plan = QuantConfig(method="rdfsq", bits=2, group_widths=(2,))
+    key = jax.random.PRNGKey(0)
+    params = sp.init_pipeline_params(key, cfg)
+    tokens = jax.random.randint(key, (n_micro, micro_batch, seq), 0,
+                                cfg.vocab_size)
+    labels = jnp.concatenate(
+        [tokens[:, :, 1:],
+         jnp.full((n_micro, micro_batch, 1), IGNORE, tokens.dtype)],
+        axis=-1)
+    mesh = hub_mesh(1)
+
+    pipe_step = sp.build_pipeline_step(cfg, mesh, q_static, n_micro,
+                                       micro_batch, seq)
+    hub = HubConfig(n_clients=1, quant=q_plan)
+    hub_step = build_hub_step(cfg, mesh, hub, n_micro, micro_batch, seq)
+    with mesh:
+        loss_pipe, _ = jax.jit(pipe_step)(params, tokens, labels)
+        loss_hub, _, _ = jax.jit(hub_step)(
+            params, tokens[:, None], labels[:, None])
+    diff = abs(float(loss_pipe) - float(loss_hub))
+    print(f"[split-hub parity grouped] static-2bit pipeline "
+          f"{float(loss_pipe):.6f} vs hub(N=1) identity-plan "
+          f"{float(loss_hub):.6f} (|diff| {diff:.2e})")
+    assert diff < tol, (float(loss_pipe), float(loss_hub), diff)
+    return dict(loss_pipeline=float(loss_pipe), loss_hub=float(loss_hub),
+                diff=diff)
+
+
+def dryrun_train_adaptive(arch: str = "llama3_2_3b", n_clients: int = 3,
+                          n_steps: int = 4, n_micro: int = 2,
+                          micro_batch: int = 4, seq: int = 32,
+                          lr: float = 5e-3) -> Dict:
+    """Execute the per-client re-planning lockstep hub end to end: every
+    client's entropy EMA drives its own plan under a shared ~2-bit code
+    budget; asserts the loss decreases and the adopted plans respect the
+    budget."""
+    from repro.configs import get_config
+    from repro.data.pipeline import make_pipeline
+
+    cfg = get_config(arch).reduced()
+    hub = HubConfig(n_clients=n_clients,
+                    quant=QuantConfig(method="rdfsq", bits=2))
+    mesh = hub_mesh(n_clients)
+    pipe = make_pipeline(cfg, n_micro * n_clients * micro_batch, seq,
+                         seed=0)
+
+    def batches():
+        for _ in range(n_steps):
+            b = next(pipe)
+            yield (b["tokens"].reshape(n_micro, n_clients, micro_batch,
+                                       seq),
+                   b["labels"].reshape(n_micro, n_clients, micro_batch,
+                                       seq))
+
+    budget = (micro_batch // 2) * seq * cfg.d_model * 2 / 8
+    plan_log: List = []
+    opt = AdamWConfig(lr=lr, weight_decay=0.0)
+    out = train_hub(cfg, hub, opt, batches(), micro_batch=micro_batch,
+                    seq=seq, mode="lockstep", mesh=mesh, n_micro=n_micro,
+                    wire_budget_bytes=budget, plan_groups=8,
+                    plan_log=plan_log)
+    hist = out["history"]
+    plans = plan_log[-1][1] if plan_log else ()
+    print(f"[split-hub adaptive N={n_clients}] loss "
+          + " -> ".join(f"{v:.4f}" for v in hist)
+          + f" (plans {plans})")
+    assert hist[-1] < hist[0], f"adaptive hub loss did not decrease: {hist}"
+    assert plan_log, "adaptive hub never adopted a plan"
+    for per_client_plans in (p for _, p in plan_log):
+        for p in per_client_plans:
+            assert len(p) == 8 and all(1 <= w <= 8 for w in p), p
+            assert sum(p) / len(p) <= 2.0 + 1e-9, p
+    return dict(loss_history=hist,
+                plans=[list(p) for p in plans],
+                wire_bytes_per_tick=out["wire_bytes_per_tick"])
+
+
 def dryrun_train_async(arch: str = "llama3_2_3b", n_clients: int = 3,
                        n_ticks: int = 24, micro_batch: int = 4,
                        seq: int = 32, lr: float = 5e-3) -> Dict:
@@ -322,7 +503,10 @@ def main(smoke: bool = False) -> Dict:
     # devices; the full profile only trains async longer
     out: Dict = {}
     out["hub"] = dryrun_hub()
+    out["hub_grouped"] = dryrun_hub_grouped()
     out["parity"] = dryrun_parity()
+    out["parity_grouped"] = dryrun_parity_grouped()
+    out["adaptive"] = dryrun_train_adaptive()
     out["async"] = dryrun_train_async(n_ticks=18 if smoke else 36)
     return out
 

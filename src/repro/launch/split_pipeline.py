@@ -184,7 +184,12 @@ def train_pipeline(cfg: ArchConfig, mesh, split, opt_cfg: AdamWConfig,
                    bwd_qcfg: Optional[QuantConfig] = None,
                    params: Optional[Dict] = None,
                    warmup_steps: int = 0, total_steps: int = 0,
-                   seed: int = 0) -> Tuple[Dict, Dict, List[float], float]:
+                   seed: int = 0,
+                   wire_budget_bytes: Optional[float] = None,
+                   plan_groups: int = 8, replan_every: int = 1,
+                   entropy_decay: float = 0.9,
+                   plan_log: Optional[List] = None
+                   ) -> Tuple[Dict, Dict, List[float], float]:
     """AdamW training loop over the N-stage quantized pipeline.
 
     Each element of ``batches`` is a (tokens, labels) pair of shape
@@ -195,10 +200,28 @@ def train_pipeline(cfg: ArchConfig, mesh, split, opt_cfg: AdamWConfig,
     AdamW the monolithic trainer uses (``total_steps == 0`` = constant
     lr) — compiled once per configuration via the lru cache above.
     Returns (params, opt_state, per-step losses, wire bytes/tick).
+
+    Entropy-adaptive wire (ROADMAP item 3): passing ``wire_budget_bytes``
+    turns on re-planning BETWEEN compiled steps.  Every ``replan_every``
+    steps the stage-0 boundary activation is probed on the incoming
+    microbatch (``schedules.boundary_probe``), a per-channel EMA entropy
+    estimate advances, and the greedy allocator turns it into a
+    ``plan_groups``-group width plan under the per-device code-byte
+    budget.  The plan rides on the cuts' ``QuantConfig.group_widths``
+    (hashable), so the lru cache above compiles once per DISTINCT plan
+    and re-planning to a previously seen plan is a cache hit, not a
+    recompile.  ``plan_log`` (optional list) receives (step, plan)
+    tuples whenever the plan changes.
     """
+    from repro.core import entropy as entropy_mod
     from repro.train.loop import TrainState
 
     split = _as_split(split)
+    adaptive = wire_budget_bytes is not None
+    if adaptive and split.quant.method not in ("fsq", "rdfsq", "nf"):
+        raise ValueError(
+            f"adaptive wire needs a grouped-capable codec, not "
+            f"{split.quant.method!r}")
     update = _cached_pipeline_update(cfg, mesh, split, bwd_qcfg, opt_cfg,
                                      n_micro, micro_batch, seq,
                                      warmup_steps, total_steps)
@@ -209,10 +232,30 @@ def train_pipeline(cfg: ArchConfig, mesh, split, opt_cfg: AdamWConfig,
                        opt=init_opt_state(params, opt_cfg),
                        step=jnp.zeros((), jnp.int32))
 
+    ema = entropy_mod.init_entropy_ema(cfg.d_model) if adaptive else None
+    scalars_per_ch = (micro_batch // mesh.shape["data"]) * seq
+    n_cuts = split.n_stages - 1
+    plan: Tuple[int, ...] = ()
+
     history: List[float] = []
     wire_b = 0.0
     with mesh:
-        for tokens, labels in batches:
+        for step_i, (tokens, labels) in enumerate(batches):
+            if adaptive and step_i % max(replan_every, 1) == 0:
+                h = schedules.boundary_probe(cfg, state.params, tokens[0])
+                ema = entropy_mod.update_entropy_ema(ema, h,
+                                                     decay=entropy_decay)
+                new_plan = schedules.replan_widths(
+                    ema, wire_budget_bytes, n_groups=plan_groups,
+                    scalars_per_channel=scalars_per_ch)
+                if new_plan != plan:
+                    plan = new_plan
+                    if plan_log is not None:
+                        plan_log.append((step_i, plan))
+                    split = split.with_plans((plan,) * n_cuts)
+                    update = _cached_pipeline_update(
+                        cfg, mesh, split, bwd_qcfg, opt_cfg, n_micro,
+                        micro_batch, seq, warmup_steps, total_steps)
             state, loss, wb = update(state, tokens, labels)
             history.append(float(loss))
             wire_b = float(wb)
@@ -356,6 +399,127 @@ def dryrun_heterogeneous(arch: str = "llama3_2_3b", n_micro: int = 3,
                 wire_bytes_per_tick=wire["fwd_tick"])
 
 
+def dryrun_grouped(arch: str = "llama3_2_3b", n_micro: int = 3,
+                   micro_batch: int = 4, seq: int = 16,
+                   smoke: bool = True) -> Dict:
+    """Grouped mixed-precision wire with per-link HLO assertions.
+
+    Two checks the exact bitstream packers unlock:
+
+    1. **3/16 exactness** — a uniform 3-bit grouped FSQ plan (FSQ ships
+       no scale side-info, so the payload is pure code bytes) must cost
+       exactly 3/16 of the identity bf16 wire.  Under the old
+       power-of-two slot packing it cost 4/16; the static accounting AND
+       the lowered HLO collective-permute bytes now both sit at 3/16.
+    2. **mixed widths** — an adaptive-shaped plan (1/2/3/8 bits across
+       channel groups) lowers to a collective whose bytes match the
+       static ``GroupedPayload`` accounting per link, within 1%.
+    """
+    from repro.launch.hlo_analysis import analyze
+
+    n_stages = 2
+    mesh = _pipeline_mesh(n_stages, smoke=smoke)
+    cfg = _homogeneous_cfg(arch, reduced=smoke, n_stages=n_stages)
+    params_sds = jax.eval_shape(
+        lambda: init_pipeline_params(jax.random.PRNGKey(0), cfg, n_stages))
+    tok_sds, lab_sds = _micro_batch_sds(n_micro, micro_batch, seq)
+    n_ticks = n_micro + n_stages - 1
+    assert cfg.d_model % 8 == 0, cfg.d_model
+
+    plans = {
+        "identity-bf16": QuantConfig(method="identity"),
+        "fsq-3bit-grouped": QuantConfig(method="fsq",
+                                        group_widths=(3,) * 8),
+        "rdfsq-mixed-1238": QuantConfig(
+            method="rdfsq", group_widths=(1, 2, 3, 8)),
+    }
+    results: Dict = {}
+    for name, q in plans.items():
+        split = SplitConfig(quant=q, learnable_codec=False,
+                            n_stages=n_stages)
+        step = build_pipeline_step(cfg, mesh, split, n_micro, micro_batch,
+                                   seq)
+        with mesh:
+            compiled = jax.jit(step).lower(params_sds, tok_sds,
+                                           lab_sds).compile()
+        hlo = compiled.as_text()
+        wire = pipeline_wire_bytes(cfg, split, micro_batch, seq,
+                                   data_shards=mesh.shape["data"])
+        assert_links_match_hlo(f"{arch} grouped {name}", hlo, mesh, wire,
+                               n_ticks)
+        hl = analyze(hlo)
+        results[name] = dict(
+            wire_bytes_per_tick=wire["fwd_tick"],
+            collective_permute_bytes=hl["collective_by_op"].get(
+                "collective-permute", 0),
+        )
+
+    # the exactness claim: 3-bit costs 3/16 of bf16, not the 4/16 a
+    # power-of-two storage slot would charge — in the static accounting
+    # AND in the compiled collective bytes
+    for field in ("wire_bytes_per_tick", "collective_permute_bytes"):
+        got = results["fsq-3bit-grouped"][field]
+        full = results["identity-bf16"][field]
+        ratio = got / max(full, 1)
+        print(f"[split-pipeline grouped] 3-bit/bf16 {field} ratio "
+              f"{ratio:.6f} (exact 3/16 = {3 / 16:.6f})")
+        assert abs(ratio - 3.0 / 16.0) < 0.01 * (3.0 / 16.0), (
+            f"3-bit grouped wire is not 3/16 of bf16 ({field}): "
+            f"{got} / {full} = {ratio:.6f}")
+    results["ratio_3bit"] = (results["fsq-3bit-grouped"]
+                             ["collective_permute_bytes"]
+                             / max(results["identity-bf16"]
+                                   ["collective_permute_bytes"], 1))
+    return results
+
+
+def dryrun_train_adaptive(arch: str = "llama3_2_3b", n_steps: int = 6,
+                          n_micro: int = 2, micro_batch: int = 4,
+                          seq: int = 32, lr: float = 5e-3) -> Dict:
+    """Execute the re-planning trainer end to end on the reduced config.
+
+    Budgets the wire at ~2 bits/scalar of code bytes; the allocator
+    spends them per channel group by entropy.  Asserts the loss
+    decreases, at least one plan was adopted, and the adopted plans
+    respect the budget (mean width <= 2 bits over 8 equal groups).
+    """
+    from repro.data.pipeline import make_pipeline
+
+    n_stages = 2
+    cfg = _homogeneous_cfg(arch, reduced=True, n_stages=n_stages)
+    mesh = jax.make_mesh((n_stages, 2), ("pod", "data"))
+    split = SplitConfig(quant=QuantConfig(method="rdfsq", bits=2),
+                        learnable_codec=False, n_stages=n_stages)
+    pipe = make_pipeline(cfg, n_micro * micro_batch, seq, seed=0)
+
+    def batches():
+        for _ in range(n_steps):
+            b = next(pipe)
+            yield (b["tokens"].reshape(n_micro, micro_batch, seq),
+                   b["labels"].reshape(n_micro, micro_batch, seq))
+
+    # 2-bit-average code budget for one device's activation slice
+    budget = (micro_batch // 2) * seq * cfg.d_model * 2 / 8
+    plan_log: List = []
+    opt = AdamWConfig(lr=lr, weight_decay=0.0)
+    _, _, history, wire_b = train_pipeline(
+        cfg, mesh, split, opt, batches(), n_micro=n_micro,
+        micro_batch=micro_batch, seq=seq, wire_budget_bytes=budget,
+        plan_groups=8, plan_log=plan_log)
+    plans = [p for _, p in plan_log]
+    print(f"[split-pipeline adaptive N={n_stages}] loss "
+          + " -> ".join(f"{v:.4f}" for v in history)
+          + f" (wire {wire_b / 1024:.1f} KiB/tick; plans {plans})")
+    assert history[-1] < history[0], \
+        f"adaptive pipeline loss did not decrease: {history}"
+    assert plans, "adaptive trainer never adopted a plan"
+    for p in plans:
+        assert len(p) == 8 and all(1 <= w <= 8 for w in p), p
+        assert sum(p) / len(p) <= 2.0 + 1e-9, f"plan over budget: {p}"
+    return dict(loss_history=history, wire_bytes_per_tick=wire_b,
+                plans=[list(p) for p in plans])
+
+
 def dryrun_backward(arch: str = "llama3_2_3b", n_micro: int = 4,
                     micro_batch: int = 32, seq: int = 1024,
                     n_stages: int = 2, reduced: bool = False,
@@ -446,14 +610,19 @@ def main(smoke: bool = False) -> Dict:
                       n_micro=3, micro_batch=4, seq=16)
         out = dryrun(bits_list=(16, 2), **cfg_kw)
         out["heterogeneous"] = dryrun_heterogeneous()
+        out["grouped"] = dryrun_grouped()
         out["train"] = dryrun_train(n_steps=4, n_micro=2, micro_batch=4,
                                     seq=32, n_stages=2)
+        out["adaptive"] = dryrun_train_adaptive(n_steps=4)
         return out
     out = dryrun()
     out["heterogeneous"] = dryrun_heterogeneous(smoke=False, n_micro=4,
                                                 micro_batch=32, seq=1024)
+    out["grouped"] = dryrun_grouped(smoke=False, n_micro=4,
+                                    micro_batch=32, seq=1024)
     out["backward"] = dryrun_backward()
     out["train"] = dryrun_train()
+    out["adaptive"] = dryrun_train_adaptive()
     return out
 
 

@@ -20,7 +20,11 @@ client-side, ships the connector activations through the existing wire
 codec (``core/quantizers`` encode -> decode, the PR-3/6 machinery), feeds
 the reconstruction to the server prefill via the ``image_features``
 bypass, and accounts the payload bytes in ``stats['wire_bytes']`` —
-matching ``WireLink.fwd_wire_bytes`` static accounting.
+matching ``WireLink.fwd_wire_bytes`` static accounting.  A grouped
+``split_wire`` (non-empty ``group_widths``) ships the connector
+activations as a mixed-precision ``GroupedPayload``;
+``split_wire_budget_bits`` additionally re-plans the widths between
+prefills from a per-channel entropy EMA of the connector features.
 """
 from __future__ import annotations
 
@@ -52,6 +56,8 @@ class ServeEngine:
                  window: Optional[int] = None, temperature: float = 0.0,
                  eos_id: Optional[int] = None, seed: int = 0,
                  split_wire: Optional[QuantConfig] = None,
+                 split_wire_budget_bits: Optional[float] = None,
+                 split_plan_groups: int = 8,
                  impl: Optional[str] = None):
         if cfg.modality == "audio":
             raise NotImplementedError("engine serves text/vlm configs")
@@ -62,6 +68,23 @@ class ServeEngine:
         self.temperature = temperature
         self.eos_id = eos_id
         self.split_wire = split_wire
+        # entropy-adaptive split wire: re-plan the connector link's
+        # channel order + per-group widths between prefills, budgeted at
+        # ``split_wire_budget_bits`` mean code bits per shipped scalar
+        # (bucket-size independent — the byte budget scales with the
+        # payload).  The plan lives on ``split_wire.group_widths`` /
+        # ``.channel_perm``, so the codec and the byte accounting pick
+        # it up unchanged.  Sorted grouping matters here: connector
+        # channels are strongly heterogeneous, and entropy-ranked groups
+        # let the allocator starve the near-dead ones.
+        self.split_wire_budget_bits = split_wire_budget_bits
+        self.split_plan_groups = split_plan_groups
+        self._wire_ema = None
+        if split_wire_budget_bits is not None:
+            if split_wire is None:
+                raise ValueError("split_wire_budget_bits needs split_wire")
+            from repro.core import entropy as entropy_mod
+            self._wire_ema = entropy_mod.init_entropy_ema(cfg.d_model)
         self.impl = impl
         self.pools = paged.init_pools(cfg, n_pages, page_size)
         self.page_pool = PagePool(n_pages)
@@ -119,9 +142,36 @@ class ServeEngine:
     # -- prefill (admission batch) --------------------------------------
     def _ship_image_features(self, image_embeds: jnp.ndarray) -> jnp.ndarray:
         """Client-side connector -> quantized wire -> server-side
-        reconstruction, with payload byte accounting."""
+        reconstruction, with payload byte accounting.
+
+        With a grouped ``split_wire`` the payload is a
+        :class:`~repro.core.payload.GroupedPayload` (per-group codes at
+        per-group widths); ``wire_bytes`` stays exact either way.  In
+        adaptive mode the connector features first advance the entropy
+        EMA and may re-plan the widths for THIS and later shipments.
+        """
+        import dataclasses
+
         feats = mlp_forward(self.params["connector"],
                             image_embeds.astype(tf.cdtype(self.cfg)))
+        if self.split_wire_budget_bits is not None:
+            from repro.core import entropy as entropy_mod
+            from repro.launch import schedules
+
+            self._wire_ema = entropy_mod.update_entropy_ema(self._wire_ema,
+                                                            feats)
+            d = feats.shape[-1]
+            perm, plan = schedules.replan_grouped(
+                self._wire_ema,
+                self.split_wire_budget_bits * feats.size / 8.0,
+                n_groups=self.split_plan_groups,
+                scalars_per_channel=feats.size // d)
+            if (plan != self.split_wire.group_widths
+                    or perm != self.split_wire.channel_perm):
+                self.split_wire = dataclasses.replace(self.split_wire,
+                                                      group_widths=plan,
+                                                      channel_perm=perm)
+                self.stats["wire_plan"] = plan
         payload = quantizers.encode(self.split_wire, feats)
         self.stats["wire_bytes"] += payload.wire_bytes()
         return quantizers.decode(self.split_wire, payload)

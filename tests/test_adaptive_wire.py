@@ -1,0 +1,240 @@
+"""Adaptive grouped wire: grouped payloads, channel permutations, the
+entropy allocator, calibration cold start, and the serve engine's
+grouped/adaptive split wire."""
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import entropy as entropy_mod
+from repro.core import quantizers as Q
+from repro.core.quantizers import QuantConfig
+from repro.core.payload import GroupedPayload
+from repro.core.split import (WireLink, calib_scale_error, init_wire_calib,
+                              update_wire_calib)
+
+
+def _x(shape, seed=0, scale=3.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# grouped payloads
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["rdfsq", "fsq", "nf"])
+def test_grouped_payload_matches_roundtrip(method):
+    """Mixed-width grouped wire: decode(encode(x)) == roundtrip(x)[0]."""
+    cfg = QuantConfig(method=method, bits=2, group_widths=(1, 2, 3, 8))
+    x = _x((4, 6, 64))
+    payload = Q.encode(cfg, x)
+    assert isinstance(payload, GroupedPayload)
+    assert payload.meta["widths"] == (1, 2, 3, 8)
+    x_hat = Q.decode(cfg, payload)
+    rt, _ = Q.roundtrip(cfg, x)
+    np.testing.assert_allclose(np.asarray(x_hat), np.asarray(rt),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_grouped_fsq_3bit_is_3_16_of_bf16():
+    """FSQ ships pure code bytes: a uniform 3-bit plan costs exactly
+    3/16 of the bf16 activation."""
+    cfg = QuantConfig(method="fsq", bits=2, group_widths=(3,) * 8)
+    sds = jax.ShapeDtypeStruct((2, 16, 64), jnp.bfloat16)
+    wire = jax.eval_shape(partial(Q.encode, cfg), sds).wire_bytes()
+    assert wire == int(np.prod(sds.shape)) * 3 // 8
+    assert wire / (int(np.prod(sds.shape)) * 2) == 3 / 16
+
+
+def test_channel_perm_inverts_and_costs_nothing():
+    """A permuted plan reconstructs channels in wire order (the decoder
+    applies the inverse gather) and adds zero payload bytes."""
+    d = 64
+    perm = tuple(int(i) for i in
+                 np.random.default_rng(7).permutation(d))
+    base = QuantConfig(method="fsq", bits=2, group_widths=(8,) * 8)
+    permed = dataclasses.replace(base, channel_perm=perm)
+    x = jnp.tanh(_x((4, 5, d), seed=3, scale=1.0))  # in FSQ's sweet spot
+    p0, p1 = Q.encode(base, x), Q.encode(permed, x)
+    assert p0.wire_bytes() == p1.wire_bytes()
+    assert p1.meta["permuted"] and not p0.meta["permuted"]
+    x_hat = Q.decode(permed, p1)
+    rt, _ = Q.roundtrip(permed, x)
+    np.testing.assert_allclose(np.asarray(x_hat), np.asarray(rt),
+                               atol=1e-5, rtol=1e-5)
+    # at 8 bits the reconstruction is near-exact — a missing inverse
+    # permutation would scramble the channel axis and blow this up
+    np.testing.assert_allclose(np.asarray(x_hat), np.asarray(x), atol=0.05)
+
+
+def test_channel_perm_length_validated():
+    cfg = QuantConfig(method="fsq", bits=2, group_widths=(2, 2),
+                      channel_perm=(1, 0, 2))
+    with pytest.raises(ValueError):
+        Q.encode(cfg, _x((2, 8)))
+
+
+# ---------------------------------------------------------------------------
+# the entropy allocator
+# ---------------------------------------------------------------------------
+
+def test_allocate_bits_uniform_on_homogeneous_signal():
+    ent = np.full(64, 1.9)
+    plan = entropy_mod.allocate_bits(ent, 2 * 64 * 100 / 8,
+                                     group_size=8, scalars_per_channel=100)
+    assert plan == (2,) * 8
+
+
+def test_allocate_bits_floor_infeasible_raises():
+    with pytest.raises(ValueError):
+        entropy_mod.allocate_bits(np.full(64, 2.0), 10.0,
+                                  group_size=8, scalars_per_channel=100)
+
+
+def test_allocate_bits_stops_at_source_coding_bound():
+    """Near-dead channels never get a second bit even under a huge
+    budget, and no group exceeds MAX_WIRE_BITS."""
+    ent = np.concatenate([np.full(32, 0.3), np.full(32, 20.0)])
+    plan = entropy_mod.allocate_bits(ent, 1e9, group_size=8,
+                                     scalars_per_channel=100)
+    assert plan[:4] == (1,) * 4          # below 1 bit of entropy: floor
+    assert plan[4:] == (8,) * 4          # clamped at the wire maximum
+    assert max(plan) <= entropy_mod.MAX_WIRE_BITS
+
+
+def test_plan_grouped_sorts_then_differentiates():
+    """Sorted grouping exposes channel-level spread the contiguous group
+    means would average away: the widths come out non-decreasing and
+    actually different across groups."""
+    rng = np.random.default_rng(0)
+    ent = rng.permutation(np.linspace(0.2, 3.2, 64))
+    perm, widths = entropy_mod.plan_grouped(
+        ent, 2 * 64 * 100 / 8, group_size=8, scalars_per_channel=100)
+    assert sorted(perm) == list(range(64))
+    assert list(ent[list(perm)]) == sorted(ent)
+    assert list(widths) == sorted(widths)  # ascending with entropy rank
+    assert widths[0] < widths[-1]          # real differentiation
+    # identical signal, identical plan: deterministic for the jit caches
+    assert entropy_mod.plan_grouped(ent, 2 * 64 * 100 / 8, group_size=8,
+                                    scalars_per_channel=100) == (perm, widths)
+
+
+def test_optimal_bits_clamped_to_wire_range():
+    assert entropy_mod.optimal_bits(25.0) == 8
+    assert entropy_mod.optimal_bits(-3.0) == 1
+    # the full estimator path: a wide-range sample at a tiny bin width
+    # reads far past 8 bits of discretized entropy, but the
+    # recommendation must stay shippable
+    x = _x((4096,), seed=1, scale=1e4)
+    bits, h = entropy_mod.estimate_optimal_bits(x, delta=1e-6)
+    assert h > 8.0
+    assert bits == 8
+
+
+def test_entropy_ema_ranks_channels_and_cold_starts():
+    """Wide channels read higher than near-constant ones, and the first
+    update adopts the batch outright (decay-independent)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(np.stack([rng.normal(0, 1e-3, 512),
+                              rng.normal(0, 1.0, 512)], axis=-1))
+    a = entropy_mod.update_entropy_ema(entropy_mod.init_entropy_ema(2), x,
+                                       decay=0.9)
+    b = entropy_mod.update_entropy_ema(entropy_mod.init_entropy_ema(2), x,
+                                       decay=0.1)
+    np.testing.assert_array_equal(np.asarray(a["hist"]),
+                                  np.asarray(b["hist"]))
+    assert float(a["count"]) == 1.0
+    ent = np.asarray(entropy_mod.entropy_ema_bits(a))
+    assert ent[0] < ent[1]
+    assert ent.min() >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# wire calibration edge cases
+# ---------------------------------------------------------------------------
+
+def test_wire_calib_cold_start_adopts_batch():
+    """count == 0 adopts the first batch's statistics exactly instead of
+    blending them toward the zero init."""
+    x = _x((8, 16), seed=2) + 5.0
+    for decay in (0.9, 0.1):
+        c = update_wire_calib(init_wire_calib(), x, decay=decay)
+        assert float(c["mean"]) == pytest.approx(float(jnp.mean(x)))
+        assert float(c["std"]) == pytest.approx(float(jnp.std(x)))
+        assert float(c["lo"]) == pytest.approx(float(jnp.min(x)))
+        assert float(c["hi"]) == pytest.approx(float(jnp.max(x)))
+        assert float(c["count"]) == 1.0
+
+
+def test_calib_scale_error_zero_span_finite():
+    """Two constant (zero-span) calibrations agree at error 0, and a
+    zero-span vs wide comparison saturates near 1 — never NaN/inf."""
+    const = update_wire_calib(init_wire_calib(), jnp.full((4, 4), 3.0))
+    wide = update_wire_calib(init_wire_calib(), _x((4, 4), seed=3))
+    zero_zero = float(calib_scale_error(const, const))
+    zero_wide = float(calib_scale_error(const, wide))
+    assert zero_zero == 0.0
+    assert np.isfinite(zero_wide) and zero_wide == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# serve engine: grouped + adaptive split wire
+# ---------------------------------------------------------------------------
+
+def _vlm_engine(split_wire=None, **kw):
+    from repro.configs import get_config
+    from repro.serve.engine import ServeEngine
+    from repro.models import transformer as tf
+
+    cfg = get_config("tinyllava").reduced()
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    b, p, pg, n_new = 2, 16, 8, 2
+    n_img = cfg.n_image_tokens
+    rng = np.random.default_rng(5)
+    toks = rng.integers(1, cfg.vocab_size, size=(b, p)).astype(np.int32)
+    imgs = rng.normal(size=(b, n_img, cfg.d_vision)).astype(np.float32)
+    n_pages = 1 + b * (-(-(n_img + p + n_new) // pg))
+    eng = ServeEngine(params, cfg, n_slots=b, page_size=pg,
+                      n_pages=n_pages, split_wire=split_wire, **kw)
+    for i in range(b):
+        eng.submit(list(toks[i]), max_new=n_new, image_embeds=imgs[i])
+    return eng, cfg, b, n_img
+
+
+def test_engine_split_serve_grouped_wire_bytes():
+    """A grouped split wire ships a GroupedPayload whose exact bytes
+    match the WireLink static accounting."""
+    from repro.models import transformer as tf
+
+    wire = QuantConfig(method="rdfsq", bits=2, group_widths=(1, 2, 3, 8))
+    eng, cfg, b, n_img = _vlm_engine(split_wire=wire)
+    res = eng.run()
+    assert all(len(v) == 2 for v in res.values())
+    link = WireLink(src=0, dst=1, quant=wire)
+    sds = jax.ShapeDtypeStruct((b, n_img, cfg.d_model), tf.cdtype(cfg))
+    assert eng.stats["wire_bytes"] == link.fwd_wire_bytes(sds)
+
+
+def test_engine_adaptive_split_serve_replans():
+    """Budgeted mode re-plans the connector wire from the entropy EMA:
+    the adopted plan (widths + sorted-channel permutation) lands on the
+    engine's QuantConfig and the byte accounting follows it."""
+    from repro.models import transformer as tf
+
+    wire = QuantConfig(method="rdfsq", bits=2)
+    eng, cfg, b, n_img = _vlm_engine(split_wire=wire,
+                                     split_wire_budget_bits=2.0,
+                                     split_plan_groups=8)
+    res = eng.run()
+    assert all(len(v) == 2 for v in res.values())
+    plan = eng.stats["wire_plan"]
+    assert plan == eng.split_wire.group_widths and len(plan) == 8
+    assert all(1 <= w <= 8 for w in plan)
+    assert sum(plan) / len(plan) <= 2.0  # within the bit budget
+    assert sorted(eng.split_wire.channel_perm) == list(range(cfg.d_model))
+    link = WireLink(src=0, dst=1, quant=eng.split_wire)
+    sds = jax.ShapeDtypeStruct((b, n_img, cfg.d_model), tf.cdtype(cfg))
+    assert eng.stats["wire_bytes"] == link.fwd_wire_bytes(sds)

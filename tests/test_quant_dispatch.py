@@ -42,10 +42,15 @@ def test_pack_unpack_roundtrip_all_widths(bits, n):
 
 
 @pytest.mark.parametrize("bits,slot", [(3, 4), (5, 8), (6, 8), (7, 8)])
-def test_odd_widths_ride_storage_slots(bits, slot):
+def test_odd_widths_pack_exactly(bits, slot):
+    """Odd widths cost exactly ceil(n*b/8) on the wire — the pow2 slot
+    only survives as the fused kernels' storage geometry."""
     assert packing.storage_bits(bits) == slot
     n = 123
-    assert packing.packed_size(n, bits) == -(-n // (8 // slot))
+    exact = -(-(n * bits) // 8)
+    slotted = -(-n // (8 // slot))
+    assert packing.packed_size(n, bits) == exact
+    assert exact < slotted  # the bitstream strictly beats slot padding
 
 
 @pytest.mark.parametrize("method", ["rdfsq", "nf", "fsq"])
