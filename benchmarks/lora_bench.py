@@ -1,0 +1,139 @@
+"""SplitLoRA full-vs-LoRA split fine-tuning benchmark (ROADMAP item 4).
+
+Three row families, all on the N-client hub of the reduced llama3 arch:
+
+- ``lora/wire/*``: static gradient-return bytes per optimizer step —
+  shipping one stage's FULL param-grads through the hub's 8-bit grad
+  codec vs the SplitLoRA adapter-grad payload at ranks 2/4/8 (the same
+  accounting ``assert_links_match_hlo`` verifies against compiled HLO in
+  the dry-runs/tests, so these numbers are HLO-backed, not estimates).
+- ``lora/opt/*``: AdamW moment bytes — full parameter moments vs the
+  adapter-only optimizer state.
+- ``lora/train/*``: the async hub (mesh-free in-graph wire, runs on one
+  host device) trained full vs ``lora_rank=4`` on identical tick
+  streams; rows carry head/tail windowed loss means and wall time per
+  tick.  LoRA starts at the base model (B = 0) and must still learn.
+
+The document — per-rank wire table + opt sizes + both loss histories —
+goes to ``BENCH_lora.json`` (the README's wire-bytes table reads it).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core.quantizers import QuantConfig
+from repro.core.split import HubConfig, tree_payload_bytes
+from repro.data.pipeline import make_pipeline
+from repro.launch.split_hub import (hub_wire_bytes, init_hub_params,
+                                    train_hub)
+from repro.optim import AdamWConfig, init_opt_state, param_bytes
+from repro.peft import adapter_bytes
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+ARCH = "llama3_2_3b"
+RANKS = (2, 4, 8)
+
+
+def _wire_table(cfg, hub: HubConfig, mb: int, seq: int) -> Dict:
+    """Per-rank gradient-return bytes: full param-grads vs adapter-grads
+    through the same grad codec (one stage slice, up + back per step)."""
+    full_sds = jax.eval_shape(
+        lambda: init_hub_params(jax.random.PRNGKey(0), cfg, hub))
+    stage = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype),
+        full_sds["blocks"])
+    full_b = tree_payload_bytes(hub.grad_quant, stage)
+    rows = {}
+    for rank in RANKS:
+        wire = hub_wire_bytes(cfg, hub, mb, seq, lora_rank=rank)
+        grads = {f"{src}->{dst}": v["grad"]
+                 for (src, dst), v in wire["links"].items()}
+        ad_b = next(iter(grads.values()))
+        rows[rank] = dict(adapter_grad_bytes=ad_b,
+                          full_grad_bytes=full_b,
+                          reduction=round(full_b / max(ad_b, 1), 1),
+                          per_link=grads)
+        emit(f"lora/wire/r{rank}", 0.0,
+             f"adapter_grad={ad_b}B;full_grad={full_b}B;"
+             f"reduction={rows[rank]['reduction']}x")
+    return rows
+
+
+def _opt_table(cfg, hub: HubConfig, opt_cfg: AdamWConfig,
+               rank: int) -> Dict:
+    params = init_hub_params(jax.random.PRNGKey(0), cfg, hub,
+                             lora_rank=rank)
+    base = {k: v for k, v in params.items() if k != "adapters"}
+    full_m = 2 * param_bytes(init_opt_state(base, opt_cfg)["m"])
+    ad_m = 2 * adapter_bytes(params["adapters"])  # m + v moments
+    emit(f"lora/opt/r{rank}", 0.0,
+         f"full_moments={full_m}B;adapter_moments={ad_m}B;"
+         f"reduction={full_m / max(ad_m, 1):.1f}x")
+    return dict(full_moment_bytes=full_m, adapter_moment_bytes=ad_m,
+                reduction=round(full_m / max(ad_m, 1), 1))
+
+
+def _train_rows(cfg, hub: HubConfig, opt_cfg: AdamWConfig, mb: int,
+                seq: int, n_ticks: int, rank: int) -> Dict:
+    n = hub.n_clients
+    out = {}
+    for name, r in (("full", 0), (f"lora-r{rank}", rank)):
+        pipe = make_pipeline(cfg, n * mb, seq, seed=0)
+
+        def batches():
+            while True:
+                b = next(pipe)
+                yield (b["tokens"].reshape(n, mb, seq),
+                       b["labels"].reshape(n, mb, seq))
+
+        t0 = time.perf_counter()
+        res = train_hub(cfg, hub, opt_cfg, batches(), micro_batch=mb,
+                        seq=seq, mode="async", n_ticks=n_ticks,
+                        lora_rank=r)
+        dt_us = (time.perf_counter() - t0) / n_ticks * 1e6
+        hist = res["history"]
+        k = max(3, n_ticks // 6)
+        head, tail = float(np.mean(hist[:k])), float(np.mean(hist[-k:]))
+        assert tail < head, f"{name} hub loss did not decrease: {hist}"
+        emit(f"lora/train/{name}", dt_us,
+             f"head_ce={head:.4f};tail_ce={tail:.4f};ticks={n_ticks}")
+        out[name] = dict(loss_history=[round(v, 4) for v in hist],
+                         head_mean=round(head, 4),
+                         tail_mean=round(tail, 4), us_per_tick=dt_us)
+    return out
+
+
+def run(fast: bool = False):
+    cfg = get_config(ARCH).reduced()
+    n_clients, mb, seq = 3, 4, 32
+    rank = 4
+    hub = HubConfig(n_clients=n_clients,
+                    quant=QuantConfig(method="rdfsq", bits=2),
+                    grad_quant=QuantConfig(method="rdfsq", bits=8,
+                                           stats_axis="tensor"),
+                    tick_rates=(1,) * n_clients)
+    opt_cfg = AdamWConfig(lr=3e-2, weight_decay=0.0)
+    doc = dict(backend=jax.default_backend(), smoke=fast, arch=ARCH,
+               n_clients=n_clients, micro_batch=mb, seq=seq,
+               grad_codec="rdfsq-8bit-tensor",
+               wire=_wire_table(cfg, hub, mb, seq),
+               opt=_opt_table(cfg, hub, opt_cfg, rank),
+               train=_train_rows(cfg, hub, opt_cfg, mb, seq,
+                                 12 if fast else 24, rank))
+    path = ROOT / "BENCH_lora.json"
+    path.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"wrote {path}")
+    return doc
+
+
+if __name__ == "__main__":
+    run()

@@ -119,8 +119,14 @@ def _curve(fast: bool = False) -> Dict:
         feats = mlp_forward(p["connector"],
                             b.pop("image_embeds").astype(dtype))
         if wire_q is not None:
-            f_hat, _ = Q.roundtrip(wire_q, feats)
-            feats = f_hat
+            if wire_q.scale_dq:
+                # the STE roundtrip keeps exact fp16 scales; the dq'd
+                # wire must be measured through the real encode/decode
+                # pair so the CE pays for the 8-bit scale codes it ships
+                feats = Q.decode(wire_q, Q.encode(wire_q, feats))
+            else:
+                f_hat, _ = Q.roundtrip(wire_q, feats)
+                feats = f_hat
         b["image_features"] = feats.astype(dtype)
         logits, _ = tf.forward(p, cfg, b, rng=None)
         return cross_entropy(logits, b["labels"])
@@ -155,14 +161,26 @@ def _curve(fast: bool = False) -> Dict:
     static2 = QuantConfig(method="rdfsq", bits=2)
     static2_bytes = _payload_bytes(static2, f_sds)
     floor = dataclasses.replace(static2, group_widths=(1,) * _N_GROUPS)
-    side_bytes = (_payload_bytes(floor, f_sds)
-                  - batch * n_img * cfg.d_model * 1 // 8)
+    code_1bit = batch * n_img * cfg.d_model * 1 // 8
+    side_bytes = _payload_bytes(floor, f_sds) - code_1bit
     perm, plan = entropy_mod.plan_grouped(
         ent, static2_bytes - side_bytes,
         group_size=cfg.d_model // _N_GROUPS,
         scalars_per_channel=batch * n_img)
     adaptive = dataclasses.replace(static2, group_widths=plan,
                                    channel_perm=perm)
+    # double-quantized scale side-info: 8-bit scale codes against one
+    # per-payload fp16 range halve the side bytes, and the freed budget
+    # goes back to the allocator as code bits
+    side_dq = (_payload_bytes(dataclasses.replace(floor, scale_dq=True),
+                              f_sds) - code_1bit)
+    assert side_dq < side_bytes, (side_dq, side_bytes)
+    perm_dq, plan_dq = entropy_mod.plan_grouped(
+        ent, static2_bytes - side_dq,
+        group_size=cfg.d_model // _N_GROUPS,
+        scalars_per_channel=batch * n_img)
+    adaptive_dq = dataclasses.replace(static2, group_widths=plan_dq,
+                                      channel_perm=perm_dq, scale_dq=True)
 
     # -- held-out CE per wire config: same-stream batches (the synthetic
     #    task is seed-specific, so a different seed would be OOD), same
@@ -176,6 +194,7 @@ def _curve(fast: bool = False) -> Dict:
         ("static-3bit", dataclasses.replace(static2, bits=3)),
         ("static-4bit", dataclasses.replace(static2, bits=4)),
         ("adaptive-grouped", adaptive),
+        ("adaptive-dq-scales", adaptive_dq),
     ]
     for name, wq in settings:
         loss_fn = jax.jit(lambda p, b, w=wq: vlm_loss(p, b, w))
@@ -190,22 +209,25 @@ def _curve(fast: bool = False) -> Dict:
              f"eval_ce={points[name]['eval_ce']:.4f};"
              f"wire_bytes={wire_bytes}")
 
-    ad, st = points["adaptive-grouped"], points["static-2bit"]
-    print(f"quant/curve adaptive plan {plan}: "
-          f"{ad['wire_bytes']}B ce={ad['eval_ce']:.4f} vs static-2bit "
-          f"{st['wire_bytes']}B ce={st['eval_ce']:.4f}")
-    assert ad["wire_bytes"] <= st["wire_bytes"], (
-        f"adaptive plan exceeds the static 2-bit byte budget: "
-        f"{ad['wire_bytes']} > {st['wire_bytes']}")
-    assert ad["eval_ce"] < st["eval_ce"], (
-        f"adaptive plan does not beat static 2-bit CE: "
-        f"{ad['eval_ce']} >= {st['eval_ce']}")
+    st = points["static-2bit"]
+    for pname in ("adaptive-grouped", "adaptive-dq-scales"):
+        ad = points[pname]
+        print(f"quant/curve {pname} plan {ad['widths']}: "
+              f"{ad['wire_bytes']}B ce={ad['eval_ce']:.4f} vs static-2bit "
+              f"{st['wire_bytes']}B ce={st['eval_ce']:.4f}")
+        assert ad["wire_bytes"] <= st["wire_bytes"], (
+            f"{pname} plan exceeds the static 2-bit byte budget: "
+            f"{ad['wire_bytes']} > {st['wire_bytes']}")
+        assert ad["eval_ce"] < st["eval_ce"], (
+            f"{pname} plan does not beat static 2-bit CE: "
+            f"{ad['eval_ce']} >= {st['eval_ce']}")
 
     curve = dict(config="tinyllava.reduced", batch=batch, seq=seq,
                  boundary="connector (split-serve wire)",
                  n_train_steps=n_train, n_eval_batches=n_eval,
                  n_groups=_N_GROUPS, plan=list(plan),
-                 channel_perm=list(perm),
+                 channel_perm=list(perm), plan_dq=list(plan_dq),
+                 side_bytes=int(side_bytes), side_bytes_dq=int(side_dq),
                  entropy_bits=[round(float(v), 4) for v in np.asarray(ent)],
                  points=points)
     results_dir = ROOT / "results"

@@ -11,9 +11,9 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (attention_bench, fig4_attack, quant_bench, roofline,
-                        serve_bench, table1_entropy, table2_bits,
-                        table3_performance, table4_comm)
+from benchmarks import (attention_bench, fig4_attack, lora_bench,
+                        quant_bench, roofline, serve_bench, table1_entropy,
+                        table2_bits, table3_performance, table4_comm)
 
 SUITES = {
     "table1": lambda fast: table1_entropy.run(),
@@ -25,6 +25,7 @@ SUITES = {
     "roofline": lambda fast: roofline.run(),
     "attention": lambda fast: attention_bench.run(fast=fast),
     "quant": lambda fast: quant_bench.run(fast=fast),
+    "lora": lambda fast: lora_bench.run(fast=fast),
     "serve": lambda fast: serve_bench.run(fast=fast),
 }
 

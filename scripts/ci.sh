@@ -44,6 +44,15 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 # Split-hub smoke: 3 clients + 1 server on 8 fake devices with
 # heterogeneous per-client quants — per-link HLO byte assertions, the
 # hub(N=1) == pipeline loss parity check, and a short async-mode
-# (staleness-tolerant) training run.
+# (staleness-tolerant) training run.  Both this and the split-pipeline
+# smoke above include the SplitLoRA dry-runs: adapter-only training
+# with base weights bit-frozen and the quantized adapter-grad return
+# wire asserted against compiled HLO.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m repro.launch.split_hub --smoke
+
+# SplitLoRA bench smoke: full-vs-LoRA gradient-return wire bytes (per
+# rank), adapter-sized optimizer moments, and async-hub full-vs-LoRA
+# training rows; writes BENCH_lora.json.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m benchmarks.run --fast --only lora

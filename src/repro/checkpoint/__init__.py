@@ -1,3 +1,4 @@
-from repro.checkpoint.ckpt import restore, save
+from repro.checkpoint.ckpt import (load_adapters, restore, save,
+                                   save_adapters)
 
-__all__ = ["save", "restore"]
+__all__ = ["save", "restore", "save_adapters", "load_adapters"]

@@ -65,3 +65,34 @@ def restore(path: str, template: Any) -> Any:
                 f"template {leaf.shape}")
         leaves.append(jnp.asarray(arr))
     return treedef.unflatten(leaves)
+
+
+def save_adapters(path: str, adapters: Any) -> None:
+    """Persist a SplitLoRA adapter tree (and nothing else).
+
+    The whole point of the adapter checkpoint is that it is orders of
+    magnitude smaller than the full parameter tree, so this validates
+    the tree really is adapters-only — every leaf path must end in a
+    ``lora_a``/``lora_b`` key (``repro.peft.init_lora_params`` layout)
+    — before delegating to :func:`save`.
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(adapters)
+    if not flat:
+        raise ValueError("empty adapter tree")
+    for p, _leaf in flat:
+        key = _path_str(p)
+        if key.rsplit("/", 1)[-1] not in ("lora_a", "lora_b"):
+            raise ValueError(
+                f"not an adapter tree: leaf {key!r} is not a "
+                f"lora_a/lora_b entry")
+    save(path, adapters)
+
+
+def load_adapters(path: str, template: Any) -> Any:
+    """Restore an adapter tree saved by :func:`save_adapters`.
+
+    ``template`` is an adapter tree of the target shapes — e.g.
+    ``init_lora_params(key, params, rank)`` or ``params["adapters"]`` —
+    restored bit-exactly (bf16 via the uint16 view).
+    """
+    return restore(path, template)

@@ -88,21 +88,37 @@ class GroupedPayload:
     Like :class:`CommPayload`, ``wire_bytes`` is computed from static
     shapes only, so a grouped wire's byte cost stays a compile-time
     constant (what the HLO collective-permute assertions check).
+
+    Double-quantized scales (``QuantConfig.scale_dq``): the per-group
+    fp16 scale side-info is itself quantized to 8-bit codes against one
+    shared affine range; ``scale_meta`` is that range — a (2,) fp16
+    (lo, hi) pair per payload, counted on the wire like everything else.
+    ``None`` when the plan ships fp16 scales directly.
     """
 
     groups: Tuple[CommPayload, ...]
+    scale_meta: Optional[jnp.ndarray] = None
     meta: Dict[str, Any] = dataclasses.field(
         default_factory=dict, metadata=dict(static=True)
     )
 
     def wire_bytes(self) -> int:
-        """Total bytes on the wire: the sum over group payloads."""
-        return sum(g.wire_bytes() for g in self.groups)
+        """Total bytes on the wire: the sum over group payloads, plus the
+        double-quant scale range when present."""
+        total = sum(g.wire_bytes() for g in self.groups)
+        if self.scale_meta is not None:
+            n = 1
+            for s in self.scale_meta.shape:
+                n *= s
+            total += n * jnp.dtype(self.scale_meta.dtype).itemsize
+        return int(total)
 
     def arrays(self) -> Tuple[jnp.ndarray, ...]:
         out: Tuple[jnp.ndarray, ...] = ()
         for g in self.groups:
             out += g.arrays()
+        if self.scale_meta is not None:
+            out += (self.scale_meta,)
         return out
 
     @property

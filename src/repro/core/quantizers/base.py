@@ -101,6 +101,13 @@ class QuantConfig:
     # after reassembly): entropy-sorted grouping.  Plan metadata, not
     # payload content — zero wire bytes.  Empty = identity.
     channel_perm: Tuple[int, ...] = ()
+    # Double-quantize the grouped wire's scale side-info: every group's
+    # fp16 scales ship as 8-bit codes against one shared per-payload
+    # (lo, hi) fp16 range (GroupedPayload.scale_meta).  Halves the scale
+    # bytes — which dominate narrow-width grouped payloads at small
+    # per-(sample, group) populations.  Encode/decode wire form only;
+    # the differentiable roundtrip keeps exact fp16 scales.
+    scale_dq: bool = False
 
     @property
     def levels(self) -> int:
@@ -194,6 +201,56 @@ def _invert_perm(cfg: QuantConfig, x: jnp.ndarray) -> jnp.ndarray:
     return jnp.take(x, jnp.asarray(inv), axis=-1)
 
 
+def _dq_scales(groups):
+    """8-bit double-quant of the groups' fp16 scale side-info.
+
+    One affine (lo, hi) range is shared by every scale tensor in the
+    payload — the codes are ``round(255 * (s - lo) / (hi - lo))`` uint8
+    and the range ships as a (2,) fp16 ``scale_meta``.  Groups without
+    scales (FSQ) or with already-integer scales (NF's own block-scale
+    double quant) pass through untouched.
+    """
+    def eligible(g):
+        return (g.scales is not None
+                and jnp.issubdtype(g.scales.dtype, jnp.floating))
+
+    vals = [g.scales for g in groups if eligible(g)]
+    if not vals:
+        return tuple(groups), None
+    flat = jnp.concatenate([v.reshape(-1).astype(jnp.float32)
+                            for v in vals])
+    lo, hi = jnp.min(flat), jnp.max(flat)
+    span = jnp.maximum(hi - lo, 1e-12)
+    out = []
+    for g in groups:
+        if not eligible(g):
+            out.append(g)
+            continue
+        codes = jnp.round((g.scales.astype(jnp.float32) - lo) / span
+                          * 255.0).astype(jnp.uint8)
+        out.append(dataclasses.replace(
+            g, scales=codes, meta=dict(g.meta, scale_dq=True)))
+    meta = jnp.stack([lo, hi]).astype(jnp.float16)
+    return tuple(out), meta
+
+
+def _undq_scales(payload: GroupedPayload):
+    """Invert :func:`_dq_scales`: rebuild fp16 scales from uint8 codes."""
+    lo = payload.scale_meta[0].astype(jnp.float32)
+    hi = payload.scale_meta[1].astype(jnp.float32)
+    span = jnp.maximum(hi - lo, 1e-12)
+    out = []
+    for g in payload.groups:
+        if g.scales is None or not g.meta.get("scale_dq"):
+            out.append(g)
+            continue
+        scales = (lo + g.scales.astype(jnp.float32) / 255.0 * span
+                  ).astype(jnp.float16)
+        meta = {k: v for k, v in g.meta.items() if k != "scale_dq"}
+        out.append(dataclasses.replace(g, scales=scales, meta=meta))
+    return tuple(out)
+
+
 def encode_grouped(cfg: QuantConfig, x: jnp.ndarray,
                    rng: Optional[jax.Array] = None,
                    impl: Optional[str] = None) -> GroupedPayload:
@@ -215,8 +272,11 @@ def encode_grouped(cfg: QuantConfig, x: jnp.ndarray,
                                                      len(cfg.group_widths)))):
         xg = jax.lax.slice_in_dim(x, i * gs, (i + 1) * gs, axis=x.ndim - 1)
         groups.append(encode(sub_cfg, xg, r, impl))
+    groups, scale_meta = (_dq_scales(groups) if cfg.scale_dq
+                          else (tuple(groups), None))
     return GroupedPayload(
-        groups=tuple(groups),
+        groups=groups,
+        scale_meta=scale_meta,
         meta=dict(method=cfg.method, widths=tuple(cfg.group_widths),
                   group_size=gs, shape=tuple(x.shape), dtype=str(x.dtype),
                   permuted=bool(cfg.channel_perm)),
@@ -225,8 +285,10 @@ def encode_grouped(cfg: QuantConfig, x: jnp.ndarray,
 
 def decode_grouped(cfg: QuantConfig, payload: GroupedPayload) -> jnp.ndarray:
     """Reassemble the channel axis from the per-group reconstructions."""
+    groups = (_undq_scales(payload) if payload.scale_meta is not None
+              else payload.groups)
     parts = [decode(sub_cfg, g)
-             for sub_cfg, g in zip(cfg.group_cfgs(), payload.groups)]
+             for sub_cfg, g in zip(cfg.group_cfgs(), groups)]
     return _invert_perm(cfg, jnp.concatenate(parts, axis=-1))
 
 

@@ -233,6 +233,11 @@ class WireLink:
     quant: QuantConfig
     bwd_quant: Optional[QuantConfig] = None
     client: Optional[int] = None
+    # SplitLoRA gradient-return codec: when the link's stages train LoRA
+    # adapters, the returned/applied gradient traffic shrinks to the
+    # adapter-grad tree, compressed by this codec (None = raw fp).  The
+    # cotangent crossing the link (bwd_quant) is unchanged.
+    grad_quant: Optional[QuantConfig] = None
 
     @property
     def perm(self) -> Tuple[Tuple[int, int], ...]:
@@ -283,6 +288,65 @@ class WireLink:
                                  jax.ShapeDtypeStruct(x_sds.shape,
                                                       x_sds.dtype))
         return payload.wire_bytes()
+
+    def grad_wire_bytes(self, grad_tree_sds) -> int:
+        """Static bytes of ONE direction of the SplitLoRA gradient return:
+        the quantized adapter-grad tree (see :func:`tree_payload_bytes`).
+        The trip crosses the link twice (up + back), once per step."""
+        return tree_payload_bytes(self.grad_quant, grad_tree_sds)
+
+    def grad_trip(self, grad_tree, axis_name: str = "pod"):
+        """Round-trip the adapter-grad tree across this link (up + back),
+        decoding to the gradient the optimizer applies."""
+        return grad_return_trip(self.grad_quant, grad_tree, axis_name,
+                                self.perm)
+
+
+def tree_payload_bytes(q: Optional[QuantConfig], tree_sds) -> int:
+    """Static wire bytes of a quantized *pytree* (one payload per leaf).
+
+    ``q is None`` means the raw tree crosses uncompressed (at each leaf's
+    own dtype width, as ``_one_ppermute`` pins it).  Used for the hub's
+    adapter-grad return accounting: the SplitLoRA gradient wire carries
+    the whole adapter-grad tree, not a single boundary activation.
+    """
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree_sds):
+        if q is None or q.method == "identity":
+            total += math.prod(leaf.shape) * jnp.dtype(leaf.dtype).itemsize
+        else:
+            payload = jax.eval_shape(
+                partial(quantizers.encode, q),
+                jax.ShapeDtypeStruct(leaf.shape, leaf.dtype))
+            total += payload.wire_bytes()
+    return int(total)
+
+
+def grad_return_trip(q: Optional[QuantConfig], tree, axis_name: str,
+                     perm: Tuple[Tuple[int, int], ...]):
+    """SplitLoRA gradient return: the adapter-grad tree crosses the link
+    as a quantized payload, up and back.
+
+    The client encodes each adapter-grad leaf with ``q``, ships the
+    packed payload to the hub on ``perm``, the hub returns the payload it
+    accepted on the reverse permutation, and the client decodes — the
+    gradient the optimizer then applies has honestly crossed the codec
+    in both directions (nothing for XLA to dead-code away), and each
+    direction costs exactly ``tree_payload_bytes(q, tree)`` on the wire.
+    ``q is None`` round-trips the raw tree (bitcast-pinned widths).
+    """
+    rev = [(dst, src) for (src, dst) in perm]
+
+    def one(leaf):
+        if q is None or q.method == "identity":
+            up = _one_ppermute(leaf, axis_name, list(perm))
+            return _one_ppermute(up, axis_name, rev)
+        payload = quantizers.encode(q, leaf)
+        up = _tree_ppermute(payload, axis_name, list(perm))
+        back = _tree_ppermute(up, axis_name, rev)
+        return quantizers.decode(q, back).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(one, tree)
 
 
 def pipeline_links(split: SplitConfig,
@@ -337,6 +401,10 @@ class HubConfig:
     client_quants: Tuple[QuantConfig, ...] = ()
     bwd_quant: Optional[QuantConfig] = None
     tick_rates: Tuple[int, ...] = ()
+    # SplitLoRA: codec for the adapter-grad return wire (see
+    # ``WireLink.grad_quant``); only read when the hub trains with
+    # ``lora_rank > 0``.  None = raw fp adapter grads.
+    grad_quant: Optional[QuantConfig] = None
 
     @property
     def server_stage(self) -> int:
@@ -366,7 +434,8 @@ class HubConfig:
     def links(self) -> Tuple[WireLink, ...]:
         """Star topology: client c -> server, one link per client."""
         return tuple(WireLink(src=c, dst=self.server_stage, quant=q,
-                              bwd_quant=self.bwd_quant, client=c)
+                              bwd_quant=self.bwd_quant, client=c,
+                              grad_quant=self.grad_quant)
                      for c, q in enumerate(self.resolve_client_quants()))
 
     def with_plans(self, plans: Tuple[Tuple[int, ...], ...]) -> "HubConfig":

@@ -56,6 +56,11 @@ class StageProgram:
     per_stage: int
     first: bool
     last: bool
+    # SplitLoRA: rank of the low-rank adapters this stage trains.  0 means
+    # full fine-tuning (every base weight steps); r > 0 freezes the base
+    # weights and steps only the (per-stage) adapter pytree, which also
+    # shrinks the hub's gradient-return wire to the adapter-grad payload.
+    lora_rank: int = 0
 
     @property
     def name(self) -> str:
@@ -64,25 +69,30 @@ class StageProgram:
         return f"stage{self.index}/{kind}"
 
 
-def chain_programs(cfg: ArchConfig, n_stages: int) -> Tuple[StageProgram, ...]:
+def chain_programs(cfg: ArchConfig, n_stages: int,
+                   lora_rank: int = 0) -> Tuple[StageProgram, ...]:
     """The linear pipeline: stage s runs layers [s*L/N, (s+1)*L/N)."""
     assert cfg.n_layers % n_stages == 0, (cfg.n_layers, n_stages)
     per = cfg.n_layers // n_stages
     return tuple(StageProgram(index=s, n_stages=n_stages, per_stage=per,
-                              first=(s == 0), last=(s == n_stages - 1))
+                              first=(s == 0), last=(s == n_stages - 1),
+                              lora_rank=lora_rank)
                  for s in range(n_stages))
 
 
-def hub_programs(cfg: ArchConfig, n_clients: int) -> Tuple[StageProgram, ...]:
+def hub_programs(cfg: ArchConfig, n_clients: int,
+                 lora_rank: int = 0) -> Tuple[StageProgram, ...]:
     """The star topology: N client stages (embed + bottom half) feeding one
     shared server stage (top half + head)."""
     assert cfg.n_layers % 2 == 0, cfg.n_layers
     per = cfg.n_layers // 2
     clients = tuple(StageProgram(index=c, n_stages=n_clients + 1,
-                                 per_stage=per, first=True, last=False)
+                                 per_stage=per, first=True, last=False,
+                                 lora_rank=lora_rank)
                     for c in range(n_clients))
     server = StageProgram(index=n_clients, n_stages=n_clients + 1,
-                          per_stage=per, first=False, last=True)
+                          per_stage=per, first=False, last=True,
+                          lora_rank=lora_rank)
     return clients + (server,)
 
 
@@ -98,15 +108,39 @@ def embed_tokens(cfg: ArchConfig, params: Dict, tokens: jnp.ndarray,
 
 
 def run_blocks(cfg: ArchConfig, blocks: Dict, x: jnp.ndarray,
-               positions: jnp.ndarray) -> jnp.ndarray:
+               positions: jnp.ndarray,
+               adapters: Optional[Dict] = None,
+               lora_scale: float = 1.0) -> jnp.ndarray:
     """Body segment: run a layer-stacked block tree through the unified
-    stack executor (same remat policy as the monolithic forward)."""
-    def body(h, p):
-        h, _, _ = tf.block_forward(cfg, "dense", p, h,
+    stack executor (same remat policy as the monolithic forward).
+
+    With ``adapters`` (a layer-stacked LoRA tree mirroring ``blocks``),
+    the executor scans the *tuple* pytree ``(blocks, adapters)`` so each
+    layer's slice keeps block and adapter paths aligned, and the block
+    runs on the effective weights ``w + scale * A @ B`` — base leaves
+    stay frozen; gradients flow to the adapter factors only.
+    """
+    if adapters is None:
+        def body(h, p):
+            h, _, _ = tf.block_forward(cfg, "dense", p, h,
+                                       positions=positions, window=None)
+            return h, ({}, None)
+
+        x, _, _ = stack_mod.run_stack(body, x, blocks, remat=cfg.remat,
+                                      remat_group=cfg.remat_group)
+        return x
+
+    from repro.peft import apply_lora
+
+    def body(h, pa):
+        p, ad = pa
+        p_eff = apply_lora(p, ad, scale=lora_scale)
+        h, _, _ = tf.block_forward(cfg, "dense", p_eff, h,
                                    positions=positions, window=None)
         return h, ({}, None)
 
-    x, _, _ = stack_mod.run_stack(body, x, blocks, remat=cfg.remat,
+    x, _, _ = stack_mod.run_stack(body, x, (blocks, adapters),
+                                  remat=cfg.remat,
                                   remat_group=cfg.remat_group)
     return x
 
@@ -124,7 +158,8 @@ def head_ce(cfg: ArchConfig, params: Dict, h: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def init_stage_params(key, cfg: ArchConfig, n_stages: int,
-                      per_stage: Optional[int] = None) -> Dict:
+                      per_stage: Optional[int] = None,
+                      lora_rank: int = 0) -> Dict:
     """Stage-stacked parameters: blocks (n_stages, per_stage, ...).
 
     Embed / head / final norm are shared (replicated): in the chain
@@ -133,16 +168,20 @@ def init_stage_params(key, cfg: ArchConfig, n_stages: int,
     ``n_layers // n_stages`` (the chain); the hub passes
     ``n_layers // 2`` with ``n_stages = n_clients + 1`` stacked stage
     trees (N client halves + 1 server half).
+
+    With ``lora_rank > 0`` the dict gains an ``"adapters"`` entry: a
+    LoRA tree mirroring ``blocks`` (same stage/layer stacking on every
+    leaf) — the only parameters a SplitLoRA run steps.
     """
     if per_stage is None:
         assert cfg.n_layers % n_stages == 0, (cfg.n_layers, n_stages)
         per_stage = cfg.n_layers // n_stages
-    k1, k2, k3, _ = jax.random.split(key, 4)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
     lkeys = jax.random.split(k1, n_stages * per_stage).reshape(
         n_stages, per_stage, -1)
     blocks = jax.vmap(jax.vmap(
         lambda k: tf.init_block_params(k, cfg, "dense")))(lkeys)
-    return dict(
+    params = dict(
         embed=emb_mod.init_embedding(k2, cfg.vocab_size, cfg.d_model,
                                      tf.pdtype(cfg)),
         head=emb_mod.init_head(k3, cfg.d_model, cfg.vocab_size,
@@ -150,21 +189,29 @@ def init_stage_params(key, cfg: ArchConfig, n_stages: int,
         final_norm=jnp.ones((cfg.d_model,), tf.pdtype(cfg)),
         blocks=blocks,
     )
+    if lora_rank > 0:
+        from repro.peft import init_lora_params
+
+        params["adapters"] = init_lora_params(k4, blocks, lora_rank)
+    return params
 
 
 def stage_param_specs(cfg: ArchConfig, n_stages: int,
                       per_stage: Optional[int] = None,
-                      axis: str = "pod") -> Dict:
+                      axis: str = "pod", lora_rank: int = 0) -> Dict:
     """shard_map in_specs: block stacks sharded over the stage axis,
-    shared embed/head/norm replicated."""
-    blocks_spec = jax.tree_util.tree_map(
-        lambda _: P(axis), jax.eval_shape(
-            lambda: init_stage_params(jax.random.PRNGKey(0), cfg, n_stages,
-                                      per_stage)
-        )["blocks"])
-    return dict(
+    shared embed/head/norm replicated.  Adapter stacks (when
+    ``lora_rank > 0``) shard over the stage axis exactly like blocks."""
+    sds = jax.eval_shape(
+        lambda: init_stage_params(jax.random.PRNGKey(0), cfg, n_stages,
+                                  per_stage, lora_rank=lora_rank))
+    specs = dict(
         embed=jax.tree_util.tree_map(lambda _: P(), dict(emb=0)),
         head=jax.tree_util.tree_map(lambda _: P(), dict(w=0)),
         final_norm=P(),
-        blocks=blocks_spec,
+        blocks=jax.tree_util.tree_map(lambda _: P(axis), sds["blocks"]),
     )
+    if lora_rank > 0:
+        specs["adapters"] = jax.tree_util.tree_map(lambda _: P(axis),
+                                                   sds["adapters"])
+    return specs

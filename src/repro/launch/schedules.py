@@ -80,10 +80,15 @@ from repro.train.losses import IGNORE, cross_entropy
 # ---------------------------------------------------------------------------
 
 def _link_bytes(links: Tuple[WireLink, ...], x_sds,
-                data_shards: int) -> Dict:
+                data_shards: int, grad_sds=None) -> Dict:
     """The per-link byte table shared by chain and hub topologies.
 
     ``x_sds`` is ONE device's activation slice (micro_batch/data_shards).
+    ``grad_sds`` (SplitLoRA) is one stage's adapter-grad slice *tree*:
+    each link then carries a ``grad`` entry — ONE direction of the
+    adapter-grad return payload, crossed once per step (up and back, not
+    per tick).  Full fine-tuning has no gradient-return collective
+    (parameters update in place on their own pods), so ``grad`` is 0.
     """
     table = {}
     fwd_slice = []
@@ -91,11 +96,13 @@ def _link_bytes(links: Tuple[WireLink, ...], x_sds,
     for link in links:
         f = link.fwd_wire_bytes(x_sds)
         b = link.bwd_wire_bytes(x_sds)
+        g = link.grad_wire_bytes(grad_sds) if grad_sds is not None else 0
         # grouped plans report their widths tuple (the per-group bit
         # allocation); static links report the single width — both render
         # in the dry-run link tables and key the byte assertions
         table[(link.src, link.dst)] = dict(
             fwd=f * data_shards, bwd=b * data_shards,
+            grad=g * data_shards,
             quant=link.quant.method,
             bits=(link.plan if link.quant.grouped else link.quant.bits))
         fwd_slice.append(f)
@@ -110,6 +117,8 @@ def _link_bytes(links: Tuple[WireLink, ...], x_sds,
         # whole-topology traffic per tick, each link counted exactly once
         fwd_total=sum(v["fwd"] for v in table.values()),
         bwd_total=sum(v["bwd"] for v in table.values()),
+        # whole-topology adapter-grad return per STEP, one direction
+        grad_total=sum(v["grad"] for v in table.values()),
     )
 
 
@@ -124,12 +133,28 @@ def chain_wire_bytes(cfg: ArchConfig, split: SplitConfig, micro_batch: int,
 
 
 def hub_wire_bytes(cfg: ArchConfig, hub: HubConfig, micro_batch: int,
-                   seq: int, data_shards: int = 1) -> Dict:
-    """Per-link static wire bytes of the N-client hub."""
+                   seq: int, data_shards: int = 1,
+                   lora_rank: int = 0) -> Dict:
+    """Per-link static wire bytes of the N-client hub.
+
+    With ``lora_rank > 0`` each link additionally reports its SplitLoRA
+    adapter-grad return payload (``grad``): the quantized adapter-grad
+    tree of ONE stage, crossed up + back once per step.
+    """
     assert micro_batch % data_shards == 0, (micro_batch, data_shards)
     x_sds = jax.ShapeDtypeStruct(
         (micro_batch // data_shards, seq, cfg.d_model), tf.cdtype(cfg))
-    return _link_bytes(hub.links(), x_sds, data_shards)
+    grad_sds = None
+    if lora_rank > 0:
+        ad = jax.eval_shape(
+            lambda: init_stage_params(jax.random.PRNGKey(0), cfg,
+                                      hub.n_clients + 1, cfg.n_layers // 2,
+                                      lora_rank=lora_rank))["adapters"]
+        # one stage's slice of the stage-stacked adapter tree — what a
+        # single client link actually returns
+        grad_sds = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), ad)
+    return _link_bytes(hub.links(), x_sds, data_shards, grad_sds=grad_sds)
 
 
 def pod_link_bytes(pair_bytes: Dict[Tuple[int, int], int], mesh,
@@ -220,13 +245,18 @@ def replan_grouped(ema_state: Dict, budget_bytes: float, *, n_groups: int,
 
 def build_gpipe_step(cfg: ArchConfig, mesh, split: SplitConfig,
                      n_micro: int, micro_batch: int, seq: int,
-                     bwd_qcfg: Optional[QuantConfig] = None):
+                     bwd_qcfg: Optional[QuantConfig] = None,
+                     lora_rank: int = 0):
     """Lockstep fill/drain pipeline step over stage programs + wire links.
 
     Returns fn(params, tokens, labels) -> (loss, wire_bytes) with
     ``tokens``/``labels`` (n_micro, B, S) int32 and ``wire_bytes`` the
     per-device per-tick forward payload (compile-time constant; see the
     module docstring for the per-link contract).
+
+    ``lora_rank > 0`` (SplitLoRA): ``params`` carries an ``"adapters"``
+    stack mirroring ``"blocks"``; every stage runs on the effective
+    weights ``w + A @ B`` while the base leaves stay frozen.
     """
     n_stages = split.n_stages
     assert cfg.n_layers % n_stages == 0
@@ -240,7 +270,7 @@ def build_gpipe_step(cfg: ArchConfig, mesh, split: SplitConfig,
                             data_shards=mesh.shape["data"])
     last = n_stages - 1
 
-    param_specs = stage_param_specs(cfg, n_stages)
+    param_specs = stage_param_specs(cfg, n_stages, lora_rank=lora_rank)
     tok_spec = P(None, "data", None)  # (n_micro, B, S)
 
     @partial(shard_map, mesh=mesh,
@@ -251,6 +281,8 @@ def build_gpipe_step(cfg: ArchConfig, mesh, split: SplitConfig,
         stage = jax.lax.axis_index("pod")
         my_blocks = jax.tree_util.tree_map(lambda a: a[0],
                                            params["blocks"])
+        my_adapters = None if lora_rank == 0 else \
+            jax.tree_util.tree_map(lambda a: a[0], params["adapters"])
         positions = jnp.arange(seq, dtype=jnp.int32)
 
         def tick(carry, xs):
@@ -258,7 +290,8 @@ def build_gpipe_step(cfg: ArchConfig, mesh, split: SplitConfig,
             tok, lab = xs
             x_emb = embed_tokens(cfg, params, tok, dtype)
             x_in = jnp.where(stage == 0, x_emb, recv.astype(x_emb.dtype))
-            h = run_blocks(cfg, my_blocks, x_in, positions)
+            h = run_blocks(cfg, my_blocks, x_in, positions,
+                           adapters=my_adapters)
             # ship across every cut; a stage keeps the payload arriving
             # from its own upstream cut (cut c feeds stage c+1)
             recv_new = jnp.zeros_like(h)
@@ -303,17 +336,32 @@ def build_gpipe_step(cfg: ArchConfig, mesh, split: SplitConfig,
 
 def build_gpipe_grad_step(cfg: ArchConfig, mesh, split: SplitConfig,
                           bwd_qcfg: Optional[QuantConfig], n_micro: int,
-                          micro_batch: int, seq: int):
+                          micro_batch: int, seq: int, lora_rank: int = 0):
     """Differentiates the chain pipeline loss wrt the stage parameters,
     exercising the gradient-return wire.  Returns
-    fn(params, tokens, labels) -> (loss, grads, wire_bytes)."""
+    fn(params, tokens, labels) -> (loss, grads, wire_bytes).
+
+    ``lora_rank > 0``: differentiates wrt ``params["adapters"]`` ONLY —
+    ``grads`` mirrors the adapter tree, base weights are never touched by
+    autodiff (frozen by construction, not by masking)."""
     step = build_gpipe_step(cfg, mesh, split, n_micro, micro_batch, seq,
-                            bwd_qcfg=bwd_qcfg)
+                            bwd_qcfg=bwd_qcfg, lora_rank=lora_rank)
     wire = chain_wire_bytes(cfg, split, micro_batch, seq, bwd_qcfg,
                             data_shards=mesh.shape["data"])
     tick_bytes = float(wire["fwd_tick"] + wire["bwd_tick"])
 
     def grad_step(params, tokens, labels):
+        if lora_rank > 0:
+            base = {k: v for k, v in params.items() if k != "adapters"}
+
+            def loss_fn_ad(ad):
+                loss, _ = step(dict(base, adapters=ad), tokens, labels)
+                return loss
+
+            loss, grads = jax.value_and_grad(loss_fn_ad)(
+                params["adapters"])
+            return loss, grads, jnp.asarray(tick_bytes, jnp.float32)
+
         def loss_fn(p):
             loss, _ = step(p, tokens, labels)
             return loss
@@ -329,7 +377,7 @@ def build_gpipe_grad_step(cfg: ArchConfig, mesh, split: SplitConfig,
 # ---------------------------------------------------------------------------
 
 def build_hub_step(cfg: ArchConfig, mesh, hub: HubConfig, n_micro: int,
-                   micro_batch: int, seq: int):
+                   micro_batch: int, seq: int, lora_rank: int = 0):
     """Lockstep hub step: pods 0..N-1 run client stages, pod N the server.
 
     Returns fn(params, tokens, labels) -> (loss, per_client_ce, wire_bytes)
@@ -353,9 +401,11 @@ def build_hub_step(cfg: ArchConfig, mesh, hub: HubConfig, n_micro: int,
     dtype = tf.cdtype(cfg)
     links = hub.links()
     wire = hub_wire_bytes(cfg, hub, micro_batch, seq,
-                          data_shards=mesh.shape["data"])
+                          data_shards=mesh.shape["data"],
+                          lora_rank=lora_rank)
 
-    param_specs = stage_param_specs(cfg, n_clients + 1, per_stage)
+    param_specs = stage_param_specs(cfg, n_clients + 1, per_stage,
+                                    lora_rank=lora_rank)
     tok_spec = P(None, None, "data", None)  # (n_micro, N, B, S)
 
     @partial(shard_map, mesh=mesh,
@@ -367,6 +417,8 @@ def build_hub_step(cfg: ArchConfig, mesh, hub: HubConfig, n_micro: int,
         is_server = pod == n_clients
         my_blocks = jax.tree_util.tree_map(lambda a: a[0],
                                            params["blocks"])
+        my_adapters = None if lora_rank == 0 else \
+            jax.tree_util.tree_map(lambda a: a[0], params["adapters"])
         positions = jnp.arange(seq, dtype=jnp.int32)
         b_local = tokens.shape[2]
 
@@ -378,7 +430,8 @@ def build_hub_step(cfg: ArchConfig, mesh, hub: HubConfig, n_micro: int,
 
             def client_fwd(r):
                 x = embed_tokens(cfg, params, my_tok, dtype)
-                h = run_blocks(cfg, my_blocks, x, positions)
+                h = run_blocks(cfg, my_blocks, x, positions,
+                               adapters=my_adapters)
                 # slot 0 carries this client's payload to the ship ops
                 out = jnp.zeros_like(r)
                 return out.at[0].set(h)
@@ -386,7 +439,8 @@ def build_hub_step(cfg: ArchConfig, mesh, hub: HubConfig, n_micro: int,
             def server_fwd(r):
                 # batched stage execution over the N arrivals
                 hs = r.reshape((n_clients * b_local, seq, cfg.d_model))
-                hs = run_blocks(cfg, my_blocks, hs, positions)
+                hs = run_blocks(cfg, my_blocks, hs, positions,
+                                adapters=my_adapters)
                 return hs.reshape(r.shape)
 
             h_all = jax.lax.cond(is_server, server_fwd, client_fwd, recv)
@@ -428,26 +482,79 @@ def build_hub_step(cfg: ArchConfig, mesh, hub: HubConfig, n_micro: int,
 
 
 def build_hub_grad_step(cfg: ArchConfig, mesh, hub: HubConfig,
-                        n_micro: int, micro_batch: int, seq: int):
+                        n_micro: int, micro_batch: int, seq: int,
+                        lora_rank: int = 0):
     """Differentiates the hub loss wrt the stage parameters.  The shared
     server stage accumulates gradients from every client's batched
     execution; each client's cotangent returns across its own link
     (quantized when ``hub.bwd_quant`` is set).  Returns
-    fn(params, tokens, labels) -> (loss, per_client_ce, grads, bytes)."""
-    step = build_hub_step(cfg, mesh, hub, n_micro, micro_batch, seq)
+    fn(params, tokens, labels) -> (loss, per_client_ce, grads, bytes).
+
+    ``lora_rank > 0`` (SplitLoRA): differentiates wrt
+    ``params["adapters"]`` only, and the returned/applied gradient
+    traffic shrinks to the adapter-grad payload: each client link
+    round-trips its stage's quantized adapter-grad tree across the wire
+    (``hub.grad_quant`` codec; see ``core.split.grad_return_trip``) and
+    the DECODED gradients are what the optimizer applies — the traffic is
+    real collective-permutes, asserted against HLO by the extended
+    ``assert_links_match_hlo``.
+    """
+    step = build_hub_step(cfg, mesh, hub, n_micro, micro_batch, seq,
+                          lora_rank=lora_rank)
     wire = hub_wire_bytes(cfg, hub, micro_batch, seq,
-                          data_shards=mesh.shape["data"])
+                          data_shards=mesh.shape["data"],
+                          lora_rank=lora_rank)
     tick_bytes = float(wire["fwd_tick"] + wire["bwd_tick"])
 
+    if lora_rank == 0:
+        def grad_step(params, tokens, labels):
+            def loss_fn(p):
+                loss, per_client, _ = step(p, tokens, labels)
+                return loss, per_client
+
+            (loss, per_client), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            return loss, per_client, grads, jnp.asarray(tick_bytes,
+                                                        jnp.float32)
+
+        return grad_step
+
+    # -- SplitLoRA: adapter-grad-only gradient return over the real wire
+    n_clients = hub.n_clients
+    links = hub.links()
+    ad_specs = stage_param_specs(cfg, n_clients + 1, cfg.n_layers // 2,
+                                 lora_rank=lora_rank)["adapters"]
+
+    @partial(shard_map, mesh=mesh, in_specs=(ad_specs,),
+             out_specs=ad_specs, check_rep=False)
+    def grad_return(g):
+        # every pod holds its own stage's adapter-grad slice; each client
+        # link round-trips that slice (encode -> ship to server -> server
+        # returns the accepted payload -> decode) so the grads the
+        # optimizer sees have honestly crossed the codec both ways.  The
+        # server's own adapter grads are local (no wire).
+        pod = jax.lax.axis_index("pod")
+        g0 = jax.tree_util.tree_map(lambda a: a[0], g)
+        out = g0
+        for link in links:
+            trip = link.grad_trip(g0, "pod")
+            out = jax.tree_util.tree_map(
+                lambda t, o: jnp.where(pod == link.src, t, o), trip, out)
+        return jax.tree_util.tree_map(lambda a: a[None], out)
+
     def grad_step(params, tokens, labels):
-        def loss_fn(p):
-            loss, per_client, _ = step(p, tokens, labels)
+        base = {k: v for k, v in params.items() if k != "adapters"}
+
+        def loss_fn(ad):
+            loss, per_client, _ = step(dict(base, adapters=ad),
+                                       tokens, labels)
             return loss, per_client
 
-        (loss, per_client), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params)
-        return loss, per_client, grads, jnp.asarray(tick_bytes,
-                                                    jnp.float32)
+        (loss, per_client), g_ad = jax.value_and_grad(
+            loss_fn, has_aux=True)(params["adapters"])
+        g_ad = grad_return(g_ad)
+        return loss, per_client, g_ad, jnp.asarray(tick_bytes,
+                                                   jnp.float32)
 
     return grad_step
 
@@ -465,7 +572,7 @@ def arrival_mask(tick_rates: Tuple[int, ...],
 
 
 def init_hub_state(key, cfg: ArchConfig, hub: HubConfig,
-                   opt_cfg: AdamWConfig) -> Dict:
+                   opt_cfg: AdamWConfig, lora_rank: int = 0) -> Dict:
     """Async-hub training state.
 
     ``server``: the shared pieces (server blocks, embed table, head, final
@@ -475,21 +582,44 @@ def init_hub_state(key, cfg: ArchConfig, hub: HubConfig,
     its own gradient arrives.  ``calib``: per-client wire calibration
     EMAs (N-stacked :func:`~repro.core.split.init_wire_calib`), isolated
     per client.
+
+    ``lora_rank > 0`` (SplitLoRA): every block stack is frozen; the state
+    instead carries ``client_adapters`` (N-stacked LoRA trees) and the
+    server params gain an ``"adapters"`` entry, with BOTH optimizers
+    sized by the adapter trees only.
     """
     from repro.train.loop import TrainState
 
     n = hub.n_clients
-    params = init_stage_params(key, cfg, n + 1, cfg.n_layers // 2)
+    params = init_stage_params(key, cfg, n + 1, cfg.n_layers // 2,
+                               lora_rank=lora_rank)
     client_blocks = jax.tree_util.tree_map(lambda a: a[:n],
                                            params["blocks"])
     server_params = dict(
         blocks=jax.tree_util.tree_map(lambda a: a[n], params["blocks"]),
         embed=params["embed"], head=params["head"],
         final_norm=params["final_norm"])
-    client_opt = init_opt_state(client_blocks, opt_cfg)
-    client_opt["step"] = jnp.zeros((n,), jnp.int32)
     calib = jax.tree_util.tree_map(
         lambda z: jnp.zeros((n,) + z.shape, z.dtype), init_wire_calib())
+    if lora_rank > 0:
+        client_adapters = jax.tree_util.tree_map(lambda a: a[:n],
+                                                 params["adapters"])
+        server_params["adapters"] = jax.tree_util.tree_map(
+            lambda a: a[n], params["adapters"])
+        client_opt = init_opt_state(client_adapters, opt_cfg)
+        client_opt["step"] = jnp.zeros((n,), jnp.int32)
+        return dict(
+            server=TrainState(
+                params=server_params,
+                opt=init_opt_state(server_params["adapters"], opt_cfg),
+                step=jnp.zeros((), jnp.int32)),
+            client_params=client_blocks,
+            client_adapters=client_adapters,
+            client_opt=client_opt,
+            calib=calib,
+        )
+    client_opt = init_opt_state(client_blocks, opt_cfg)
+    client_opt["step"] = jnp.zeros((n,), jnp.int32)
     return dict(
         server=TrainState(params=server_params,
                           opt=init_opt_state(server_params, opt_cfg),
@@ -502,7 +632,7 @@ def init_hub_state(key, cfg: ArchConfig, hub: HubConfig,
 
 def build_async_update(cfg: ArchConfig, hub: HubConfig,
                        opt_cfg: AdamWConfig, micro_batch: int, seq: int,
-                       calib_decay: float = 0.9):
+                       calib_decay: float = 0.9, lora_rank: int = 0):
     """One global tick of the async hub, mask-gated per arrival.
 
     Returns fn(state, tokens, labels, mask) -> (state, metrics) with
@@ -526,6 +656,10 @@ def build_async_update(cfg: ArchConfig, hub: HubConfig,
     links = hub.links()
     positions = jnp.arange(seq, dtype=jnp.int32)
     dtype = tf.cdtype(cfg)
+
+    if lora_rank > 0:
+        return _build_async_lora_update(cfg, hub, opt_cfg, micro_batch,
+                                        seq, calib_decay)
 
     def update(state, tokens, labels, mask):
         def loss_fn(server_params, client_blocks):
@@ -603,6 +737,119 @@ def build_async_update(cfg: ArchConfig, hub: HubConfig,
         metrics = dict(loss=loss, ces=ces, quant_rel_err=num / den,
                        mask=mask, grad_norm=opt_metrics["grad_norm"])
         return (dict(server=server, client_params=client_params,
+                     client_opt=client_opt, calib=calib), metrics)
+
+    return jax.jit(update)
+
+
+def _build_async_lora_update(cfg: ArchConfig, hub: HubConfig,
+                             opt_cfg: AdamWConfig, micro_batch: int,
+                             seq: int, calib_decay: float = 0.9):
+    """SplitLoRA async tick: the adapter-only twin of
+    :func:`build_async_update`.
+
+    Base block stacks (client AND server) plus embed/head/norm are
+    frozen by construction — autodiff runs wrt the adapter trees only,
+    so the state's optimizers are sized by adapter params.  When
+    ``hub.grad_quant`` is set, every client's adapter gradient crosses
+    the codec (encode -> decode, the in-graph twin of the lockstep
+    schedulers' collective grad-return wire) before it is applied.
+    """
+    from repro.train.loop import apply_adapter_gradients
+
+    n = hub.n_clients
+    links = hub.links()
+    positions = jnp.arange(seq, dtype=jnp.int32)
+    dtype = tf.cdtype(cfg)
+
+    def _grad_roundtrip(g_client):
+        if hub.grad_quant is None:
+            return g_client
+        q = hub.grad_quant
+
+        def one(leaf):  # leading axis = client
+            return jax.vmap(lambda v: quantizers.decode(
+                q, quantizers.encode(q, v)).astype(v.dtype))(leaf)
+
+        return jax.tree_util.tree_map(one, g_client)
+
+    def update(state, tokens, labels, mask):
+        client_blocks = state["client_params"]  # frozen base halves
+        server_base = state["server"].params    # frozen base + adapters
+
+        def loss_fn(server_adapters, client_adapters):
+            x = embed_tokens(cfg, server_base, tokens, dtype)  # (N,B,S,D)
+            h_pre, h_q = [], []
+            for c, link in enumerate(links):
+                blocks_c = jax.tree_util.tree_map(lambda a: a[c],
+                                                  client_blocks)
+                ad_c = jax.tree_util.tree_map(lambda a: a[c],
+                                              client_adapters)
+                hc = run_blocks(cfg, blocks_c, x[c], positions,
+                                adapters=ad_c)
+                h_hat, _ = quantizers.roundtrip(link.quant, hc)
+                if link.bwd_quant is not None:
+                    h_hat = quantize_cotangent(link.bwd_quant, h_hat)
+                h_pre.append(hc)
+                h_q.append(h_hat)
+            h_pre = jnp.stack(h_pre)
+            h_q = jnp.stack(h_q)
+            hs = h_q.reshape((n * micro_batch, seq, cfg.d_model))
+            hs = run_blocks(cfg, server_base["blocks"], hs, positions,
+                            adapters=server_adapters)
+            h_out = hs.reshape((n, micro_batch, seq, cfg.d_model))
+            ces = jnp.stack([head_ce(cfg, server_base, h_out[c],
+                                     labels[c]) for c in range(n)])
+            loss = jnp.sum(ces * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+            return loss, (ces, h_pre, h_q)
+
+        (loss, (ces, h_pre, h_q)), grads = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(
+                server_base["adapters"], state["client_adapters"])
+        g_server_ad, g_client_ad = grads
+        # the quantized gradient return: adapter grads only
+        g_client_ad = _grad_roundtrip(g_client_ad)
+
+        server_new, opt_metrics = apply_adapter_gradients(
+            state["server"], g_server_ad, opt_cfg)
+        any_arrival = jnp.sum(mask) > 0.0
+        server = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(any_arrival, a, b),
+            server_new, state["server"])
+
+        def one_client(p, g, m, v, s):
+            newp, news, _ = adamw_update(p, g, dict(m=m, v=v, step=s),
+                                         opt_cfg, 1.0)
+            return newp, news["m"], news["v"], news["step"]
+
+        newp, newm, newv, news = jax.vmap(one_client)(
+            state["client_adapters"], g_client_ad,
+            state["client_opt"]["m"], state["client_opt"]["v"],
+            state["client_opt"]["step"])
+
+        def gate(new, old):
+            m = mask.reshape((n,) + (1,) * (new.ndim - 1))
+            return jnp.where(m > 0.0, new, old)
+
+        client_adapters = jax.tree_util.tree_map(
+            gate, newp, state["client_adapters"])
+        client_opt = dict(
+            m=jax.tree_util.tree_map(gate, newm, state["client_opt"]["m"]),
+            v=jax.tree_util.tree_map(gate, newv, state["client_opt"]["v"]),
+            step=gate(news, state["client_opt"]["step"]),
+        )
+
+        calib_new = jax.vmap(partial(update_wire_calib,
+                                     decay=calib_decay))(state["calib"],
+                                                         h_pre)
+        calib = jax.tree_util.tree_map(gate, calib_new, state["calib"])
+
+        num = jnp.mean(jnp.square(h_pre - h_q), axis=(1, 2, 3))
+        den = jnp.mean(jnp.square(h_pre), axis=(1, 2, 3)) + 1e-12
+        metrics = dict(loss=loss, ces=ces, quant_rel_err=num / den,
+                       mask=mask, grad_norm=opt_metrics["grad_norm"])
+        return (dict(server=server, client_params=client_blocks,
+                     client_adapters=client_adapters,
                      client_opt=client_opt, calib=calib), metrics)
 
     return jax.jit(update)

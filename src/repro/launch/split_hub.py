@@ -62,18 +62,23 @@ def hub_mesh(n_clients: int, data_shards: int = 2):
     return jax.make_mesh((n_clients + 1, data_shards), ("pod", "data"))
 
 
-def init_hub_params(key, cfg: ArchConfig, hub: HubConfig) -> Dict:
+def init_hub_params(key, cfg: ArchConfig, hub: HubConfig,
+                    lora_rank: int = 0) -> Dict:
     """Stage-stacked hub parameters: blocks (N+1, L/2, ...) — N client
-    bottom halves + 1 server top half; embed/head/final norm shared."""
+    bottom halves + 1 server top half; embed/head/final norm shared.
+    ``lora_rank > 0`` adds the stage-stacked ``"adapters"`` LoRA tree."""
     assert cfg.n_layers % 2 == 0, cfg.n_layers
-    return init_stage_params(key, cfg, hub.n_clients + 1, cfg.n_layers // 2)
+    return init_stage_params(key, cfg, hub.n_clients + 1, cfg.n_layers // 2,
+                             lora_rank=lora_rank)
 
 
 def hub_wire_bytes(cfg: ArchConfig, hub: HubConfig, micro_batch: int,
-                   seq: int, data_shards: int = 1) -> Dict:
+                   seq: int, data_shards: int = 1,
+                   lora_rank: int = 0) -> Dict:
     """Per-link static wire bytes of the hub (see schedules.hub_wire_bytes)."""
     return schedules.hub_wire_bytes(cfg, hub, micro_batch, seq,
-                                    data_shards=data_shards)
+                                    data_shards=data_shards,
+                                    lora_rank=lora_rank)
 
 
 def hlo_link_bytes(hlo_text: str, mesh, axis: str = "pod"
@@ -95,22 +100,30 @@ build_hub_grad_step = schedules.build_hub_grad_step
 def _cached_hub_update(cfg: ArchConfig, mesh, hub: HubConfig,
                        opt_cfg: AdamWConfig, n_micro: int,
                        micro_batch: int, seq: int, warmup_steps: int,
-                       total_steps: int):
+                       total_steps: int, lora_rank: int = 0):
     """One jitted lockstep (hub grad step + AdamW apply) per configuration
     — the same recompile-avoidance cache as
-    ``split_pipeline._cached_pipeline_update``."""
-    from repro.train.loop import apply_gradients
+    ``split_pipeline._cached_pipeline_update``.  ``lora_rank`` joins the
+    cache key: the SplitLoRA update differentiates and steps the adapter
+    tree only (the grads crossing the wire are the quantized adapter-grad
+    return payloads of ``build_hub_grad_step``)."""
+    from repro.train.loop import apply_adapter_gradients, apply_gradients
 
     grad_step = build_hub_grad_step(cfg, mesh, hub, n_micro, micro_batch,
-                                    seq)
+                                    seq, lora_rank=lora_rank)
 
     @jax.jit
     def update(state, tokens, labels):
         loss, per_client, grads, wire_b = grad_step(state.params, tokens,
                                                     labels)
-        state, _ = apply_gradients(state, grads, opt_cfg,
-                                   warmup_steps=warmup_steps,
-                                   total_steps=total_steps)
+        if lora_rank > 0:
+            state, _ = apply_adapter_gradients(state, grads, opt_cfg,
+                                               warmup_steps=warmup_steps,
+                                               total_steps=total_steps)
+        else:
+            state, _ = apply_gradients(state, grads, opt_cfg,
+                                       warmup_steps=warmup_steps,
+                                       total_steps=total_steps)
         return state, loss, per_client, wire_b
 
     return update
@@ -124,7 +137,8 @@ def train_hub(cfg: ArchConfig, hub: HubConfig, opt_cfg: AdamWConfig,
               total_steps: int = 0, seed: int = 0,
               wire_budget_bytes: Optional[float] = None,
               plan_groups: int = 8, replan_every: int = 1,
-              plan_log: Optional[List] = None) -> Dict:
+              plan_log: Optional[List] = None,
+              lora_rank: int = 0) -> Dict:
     """Train the N-client hub.
 
     ``mode="lockstep"``: every client ships every tick on the SPMD mesh
@@ -149,21 +163,31 @@ def train_hub(cfg: ArchConfig, hub: HubConfig, opt_cfg: AdamWConfig,
     Plans live on the clients' ``QuantConfig.group_widths``, so the
     update cache compiles once per distinct plan vector.  ``plan_log``
     receives (step, plans) tuples on change.
+
+    SplitLoRA (ROADMAP item 4): ``lora_rank > 0`` freezes the base
+    weights and trains only the LoRA adapter tree in BOTH modes.  In
+    lockstep the server's quantized gradient return shrinks to the
+    adapter-grad payload (``hub.grad_quant`` codec); async runs the
+    in-graph twin.  Optimizer moments are sized by adapter params only.
     """
     if mode == "lockstep":
         from repro.core import entropy as entropy_mod
-        from repro.train.loop import TrainState
+        from repro.train.loop import TrainState, init_adapter_state
 
         assert mesh is not None, "lockstep mode needs the hub mesh"
         adaptive = wire_budget_bytes is not None
         update = _cached_hub_update(cfg, mesh, hub, opt_cfg, n_micro,
                                     micro_batch, seq, warmup_steps,
-                                    total_steps)
+                                    total_steps, lora_rank)
         if params is None:
-            params = init_hub_params(jax.random.PRNGKey(seed), cfg, hub)
-        state = TrainState(params=params,
-                           opt=init_opt_state(params, opt_cfg),
-                           step=jnp.zeros((), jnp.int32))
+            params = init_hub_params(jax.random.PRNGKey(seed), cfg, hub,
+                                     lora_rank=lora_rank)
+        if lora_rank > 0:
+            state = init_adapter_state(params, opt_cfg)
+        else:
+            state = TrainState(params=params,
+                               opt=init_opt_state(params, opt_cfg),
+                               step=jnp.zeros((), jnp.int32))
         n = hub.n_clients
         emas = ([entropy_mod.init_entropy_ema(cfg.d_model)
                  for _ in range(n)] if adaptive else None)
@@ -191,7 +215,7 @@ def train_hub(cfg: ArchConfig, hub: HubConfig, opt_cfg: AdamWConfig,
                         hub = hub.with_plans(plans)
                         update = _cached_hub_update(
                             cfg, mesh, hub, opt_cfg, n_micro, micro_batch,
-                            seq, warmup_steps, total_steps)
+                            seq, warmup_steps, total_steps, lora_rank)
                 state, loss, pc, wb = update(state, tokens, labels)
                 history.append(float(loss))
                 per_client = np.asarray(pc)
@@ -205,9 +229,9 @@ def train_hub(cfg: ArchConfig, hub: HubConfig, opt_cfg: AdamWConfig,
     rates = hub.resolve_tick_rates()
     assert n_ticks is not None, "async mode needs n_ticks"
     state = schedules.init_hub_state(jax.random.PRNGKey(seed), cfg, hub,
-                                     opt_cfg)
+                                     opt_cfg, lora_rank=lora_rank)
     update = schedules.build_async_update(cfg, hub, opt_cfg, micro_batch,
-                                          seq)
+                                          seq, lora_rank=lora_rank)
     history: List[float] = []
     masks: List[np.ndarray] = []
     rel_err = None
@@ -498,6 +522,136 @@ def dryrun_train_async(arch: str = "llama3_2_3b", n_clients: int = 3,
                 quant_rel_err=[float(v) for v in out["quant_rel_err"]])
 
 
+def dryrun_lora(arch: str = "llama3_2_3b", n_clients: int = 3,
+                n_steps: int = 4, n_micro: int = 2, micro_batch: int = 4,
+                seq: int = 32, lora_rank: int = 4,
+                lr: float = 3e-2) -> Dict:
+    """SplitLoRA hub acceptance gate (ROADMAP item 4).
+
+    Three checks:
+
+    1. **adapter-grad wire vs HLO** — lower the LoRA lockstep grad step
+       (heterogeneous client quants, 8-bit RD-FSQ adapter-grad codec) and
+       assert every link's static bytes against the compiled HLO
+       collective-permute traffic: forward ships x ticks PLUS the
+       adapter-grad round trip once per step, in both directions.
+    2. **lockstep trains** — loss decreases with every base weight
+       bit-frozen and AdamW moments sized by the adapter params only.
+    3. **async trains** — the in-graph twin also learns (windowed means)
+       with its per-client adapter state advancing.
+    """
+    from repro.configs import get_config
+    from repro.core.split import tree_payload_bytes
+    from repro.data.pipeline import make_pipeline
+    from repro.launch.split_pipeline import assert_links_match_hlo
+    from repro.optim import param_bytes
+    from repro.peft import adapter_bytes
+
+    cfg = get_config(arch).reduced()
+    grad_q = QuantConfig(method="rdfsq", bits=8, stats_axis="tensor")
+    hub = HubConfig(n_clients=n_clients,
+                    client_quants=_hub_quants(n_clients),
+                    grad_quant=grad_q)
+    mesh = hub_mesh(n_clients)
+
+    # 1. HLO assertion on the adapter-grad return wire
+    params_sds = jax.eval_shape(
+        lambda: init_hub_params(jax.random.PRNGKey(0), cfg, hub,
+                                lora_rank=lora_rank))
+    tok_sds = jax.ShapeDtypeStruct(
+        (n_micro, n_clients, micro_batch, seq), jnp.int32)
+    grad_step = build_hub_grad_step(cfg, mesh, hub, n_micro, micro_batch,
+                                    seq, lora_rank=lora_rank)
+    with mesh:
+        compiled = jax.jit(grad_step).lower(params_sds, tok_sds,
+                                            tok_sds).compile()
+    wire = hub_wire_bytes(cfg, hub, micro_batch, seq,
+                          data_shards=mesh.shape["data"],
+                          lora_rank=lora_rank)
+    assert_links_match_hlo(f"hub lora r={lora_rank} {arch} N={n_clients}",
+                           compiled.as_text(), mesh, wire,
+                           n_micro + 1, check_bwd=True, check_grad=True)
+    # the reduction claim: the adapter-grad payload vs shipping one
+    # stage's FULL param-grads through the same 8-bit codec
+    ad_stage = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype),
+        params_sds["adapters"])
+    full_stage = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype),
+        params_sds["blocks"])
+    ad_payload = tree_payload_bytes(grad_q, ad_stage)
+    full_payload = tree_payload_bytes(grad_q, full_stage)
+    print(f"[split-hub lora] adapter-grad payload {ad_payload / 1024:.1f} "
+          f"KiB vs full param-grad {full_payload / 1024:.1f} KiB "
+          f"({full_payload / max(ad_payload, 1):.1f}x smaller)")
+    assert ad_payload < full_payload / 4, (ad_payload, full_payload)
+
+    # 2. lockstep LoRA training: loss down, base frozen, opt adapter-sized
+    params0 = init_hub_params(jax.random.PRNGKey(0), cfg, hub,
+                              lora_rank=lora_rank)
+    base0 = jax.tree_util.tree_map(
+        jnp.copy, {k: v for k, v in params0.items() if k != "adapters"})
+    pipe = make_pipeline(cfg, n_micro * n_clients * micro_batch, seq,
+                         seed=0)
+
+    def batches():
+        for _ in range(n_steps):
+            b = next(pipe)
+            yield (b["tokens"].reshape(n_micro, n_clients, micro_batch,
+                                       seq),
+                   b["labels"].reshape(n_micro, n_clients, micro_batch,
+                                       seq))
+
+    opt_cfg = AdamWConfig(lr=lr, weight_decay=0.0)
+    out = train_hub(cfg, hub, opt_cfg, batches(), micro_batch=micro_batch,
+                    seq=seq, mode="lockstep", mesh=mesh, n_micro=n_micro,
+                    params=params0, lora_rank=lora_rank)
+    hist = out["history"]
+    print(f"[split-hub lora lockstep N={n_clients} r={lora_rank}] loss "
+          + " -> ".join(f"{v:.4f}" for v in hist))
+    assert hist[-1] < hist[0], f"LoRA hub loss did not decrease: {hist}"
+    for (pa, a), (_, b) in zip(
+            jax.tree_util.tree_leaves_with_path(base0),
+            jax.tree_util.tree_leaves_with_path(
+                {k: v for k, v in out["params"].items()
+                 if k != "adapters"})):
+        assert bool(jnp.array_equal(a, b)), \
+            f"base weight changed during LoRA hub training: {pa}"
+    ad_bytes = adapter_bytes(out["params"]["adapters"])
+    m_bytes = param_bytes(out["opt"]["m"])
+    assert m_bytes == ad_bytes, (m_bytes, ad_bytes)
+
+    # 3. async LoRA: the in-graph twin learns too
+    hub_async = HubConfig(n_clients=n_clients,
+                          client_quants=_hub_quants(n_clients),
+                          grad_quant=grad_q,
+                          tick_rates=tuple(1 + c % 2
+                                           for c in range(n_clients)))
+    pipe2 = make_pipeline(cfg, n_clients * micro_batch, seq, seed=1)
+
+    def async_batches():
+        while True:
+            b = next(pipe2)
+            yield (b["tokens"].reshape(n_clients, micro_batch, seq),
+                   b["labels"].reshape(n_clients, micro_batch, seq))
+
+    n_ticks = 18
+    out_a = train_hub(cfg, hub_async, opt_cfg, async_batches(),
+                      micro_batch=micro_batch, seq=seq, mode="async",
+                      n_ticks=n_ticks, lora_rank=lora_rank)
+    hist_a = out_a["history"]
+    k = max(3, n_ticks // 6)
+    head, tail = float(np.mean(hist_a[:k])), float(np.mean(hist_a[-k:]))
+    print(f"[split-hub lora async N={n_clients} r={lora_rank}] "
+          f"first-{k} mean {head:.4f} -> last-{k} mean {tail:.4f}")
+    assert tail < head, f"async LoRA hub loss did not decrease: {hist_a}"
+    assert "client_adapters" in out_a["state"], list(out_a["state"])
+    return dict(loss_history=hist, async_head=head, async_tail=tail,
+                adapter_grad_payload=ad_payload,
+                full_grad_payload=full_payload,
+                adapter_bytes=ad_bytes, opt_moment_bytes=m_bytes)
+
+
 def main(smoke: bool = False) -> Dict:
     # the smoke profile IS the dry-run: 3 clients + 1 server on 8 fake
     # devices; the full profile only trains async longer
@@ -508,6 +662,7 @@ def main(smoke: bool = False) -> Dict:
     out["parity_grouped"] = dryrun_parity_grouped()
     out["adaptive"] = dryrun_train_adaptive()
     out["async"] = dryrun_train_async(n_ticks=18 if smoke else 36)
+    out["lora"] = dryrun_lora()
     return out
 
 

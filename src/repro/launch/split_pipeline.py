@@ -85,14 +85,17 @@ def _homogeneous_cfg(arch: str = "llama3_2_3b", reduced: bool = False,
     return cfg
 
 
-def init_pipeline_params(key, cfg: ArchConfig, n_stages: int = 2) -> Dict:
-    """Stage-stacked parameters: blocks (N, L/N, ...); embed/head shared."""
-    return init_stage_params(key, cfg, n_stages)
+def init_pipeline_params(key, cfg: ArchConfig, n_stages: int = 2,
+                         lora_rank: int = 0) -> Dict:
+    """Stage-stacked parameters: blocks (N, L/N, ...); embed/head shared.
+    ``lora_rank > 0`` adds the stage-stacked ``"adapters"`` LoRA tree."""
+    return init_stage_params(key, cfg, n_stages, lora_rank=lora_rank)
 
 
-def pipeline_specs(cfg: ArchConfig, n_stages: int = 2) -> Dict:
+def pipeline_specs(cfg: ArchConfig, n_stages: int = 2,
+                   lora_rank: int = 0) -> Dict:
     """shard_map in_specs for the parameter tree."""
-    return stage_param_specs(cfg, n_stages)
+    return stage_param_specs(cfg, n_stages, lora_rank=lora_rank)
 
 
 def pipeline_wire_bytes(cfg: ArchConfig, split, micro_batch: int, seq: int,
@@ -119,7 +122,8 @@ def pipeline_wire_bytes(cfg: ArchConfig, split, micro_batch: int, seq: int,
 
 def build_pipeline_step(cfg: ArchConfig, mesh, split, n_micro: int,
                         micro_batch: int, seq: int,
-                        bwd_qcfg: Optional[QuantConfig] = None):
+                        bwd_qcfg: Optional[QuantConfig] = None,
+                        lora_rank: int = 0):
     """Returns a jit-able fn(params, tokens, labels) -> (loss, wire_bytes).
 
     ``tokens``/``labels`` are (n_micro, B, S) int32; ``loss`` is the
@@ -130,21 +134,24 @@ def build_pipeline_step(cfg: ArchConfig, mesh, split, n_micro: int,
     quantity; the dry-run asserts it against the lowered HLO).
     """
     return schedules.build_gpipe_step(cfg, mesh, _as_split(split), n_micro,
-                                      micro_batch, seq, bwd_qcfg=bwd_qcfg)
+                                      micro_batch, seq, bwd_qcfg=bwd_qcfg,
+                                      lora_rank=lora_rank)
 
 
 def build_pipeline_grad_step(cfg, mesh, split, bwd_qcfg, n_micro,
-                             micro_batch, seq):
+                             micro_batch, seq, lora_rank: int = 0):
     """Like build_pipeline_step but differentiates the pipeline loss wrt
     the stage parameters, exercising the gradient-return wire.
 
     Returns fn(params, tokens, labels) -> (loss, grads, wire_bytes) with
     ``wire_bytes`` the per-device per-tick forward + backward payload
     (compile-time constant, same contract as build_pipeline_step).
+    ``lora_rank > 0`` differentiates wrt the adapter tree only (``grads``
+    mirrors ``params["adapters"]``).
     """
     return schedules.build_gpipe_grad_step(cfg, mesh, _as_split(split),
                                            bwd_qcfg, n_micro, micro_batch,
-                                           seq)
+                                           seq, lora_rank=lora_rank)
 
 
 @functools.lru_cache(maxsize=16)
@@ -152,7 +159,7 @@ def _cached_pipeline_update(cfg: ArchConfig, mesh, split: SplitConfig,
                             bwd_qcfg: Optional[QuantConfig],
                             opt_cfg: AdamWConfig, n_micro: int,
                             micro_batch: int, seq: int, warmup_steps: int,
-                            total_steps: int):
+                            total_steps: int, lora_rank: int = 0):
     """One jitted (grad step + AdamW apply) per pipeline configuration.
 
     Same pattern as ``serve/decode._compiled_serve_step``: every config
@@ -160,19 +167,26 @@ def _cached_pipeline_update(cfg: ArchConfig, mesh, split: SplitConfig,
     by value, so repeated ``train_pipeline`` calls — resumed runs, sweep
     loops — reuse one traced update instead of rebuilding the shard_map
     closure and re-jitting per call (the recompile cost noted in ROADMAP
-    item 1).
+    item 1).  ``lora_rank`` joins the cache key: the SplitLoRA update
+    differentiates and steps the adapter tree only.
     """
-    from repro.train.loop import apply_gradients
+    from repro.train.loop import apply_adapter_gradients, apply_gradients
 
     grad_step = build_pipeline_grad_step(cfg, mesh, split, bwd_qcfg,
-                                         n_micro, micro_batch, seq)
+                                         n_micro, micro_batch, seq,
+                                         lora_rank=lora_rank)
 
     @jax.jit
     def update(state, tokens, labels):
         loss, grads, wire_b = grad_step(state.params, tokens, labels)
-        state, _ = apply_gradients(state, grads, opt_cfg,
-                                   warmup_steps=warmup_steps,
-                                   total_steps=total_steps)
+        if lora_rank > 0:
+            state, _ = apply_adapter_gradients(state, grads, opt_cfg,
+                                               warmup_steps=warmup_steps,
+                                               total_steps=total_steps)
+        else:
+            state, _ = apply_gradients(state, grads, opt_cfg,
+                                       warmup_steps=warmup_steps,
+                                       total_steps=total_steps)
         return state, loss, wire_b
 
     return update
@@ -188,7 +202,8 @@ def train_pipeline(cfg: ArchConfig, mesh, split, opt_cfg: AdamWConfig,
                    wire_budget_bytes: Optional[float] = None,
                    plan_groups: int = 8, replan_every: int = 1,
                    entropy_decay: float = 0.9,
-                   plan_log: Optional[List] = None
+                   plan_log: Optional[List] = None,
+                   lora_rank: int = 0
                    ) -> Tuple[Dict, Dict, List[float], float]:
     """AdamW training loop over the N-stage quantized pipeline.
 
@@ -212,9 +227,14 @@ def train_pipeline(cfg: ArchConfig, mesh, split, opt_cfg: AdamWConfig,
     and re-planning to a previously seen plan is a cache hit, not a
     recompile.  ``plan_log`` (optional list) receives (step, plan)
     tuples whenever the plan changes.
+
+    SplitLoRA (ROADMAP item 4): ``lora_rank > 0`` freezes the base stage
+    weights and trains only the LoRA adapter tree — the gradient step
+    differentiates wrt ``params["adapters"]`` alone and the optimizer
+    moments are sized by the adapter params (``init_adapter_state``).
     """
     from repro.core import entropy as entropy_mod
-    from repro.train.loop import TrainState
+    from repro.train.loop import TrainState, init_adapter_state
 
     split = _as_split(split)
     adaptive = wire_budget_bytes is not None
@@ -224,13 +244,16 @@ def train_pipeline(cfg: ArchConfig, mesh, split, opt_cfg: AdamWConfig,
             f"{split.quant.method!r}")
     update = _cached_pipeline_update(cfg, mesh, split, bwd_qcfg, opt_cfg,
                                      n_micro, micro_batch, seq,
-                                     warmup_steps, total_steps)
+                                     warmup_steps, total_steps, lora_rank)
     if params is None:
         params = init_pipeline_params(jax.random.PRNGKey(seed), cfg,
-                                      split.n_stages)
-    state = TrainState(params=params,
-                       opt=init_opt_state(params, opt_cfg),
-                       step=jnp.zeros((), jnp.int32))
+                                      split.n_stages, lora_rank=lora_rank)
+    if lora_rank > 0:
+        state = init_adapter_state(params, opt_cfg)
+    else:
+        state = TrainState(params=params,
+                           opt=init_opt_state(params, opt_cfg),
+                           step=jnp.zeros((), jnp.int32))
 
     ema = entropy_mod.init_entropy_ema(cfg.d_model) if adaptive else None
     scalars_per_ch = (micro_batch // mesh.shape["data"]) * seq
@@ -255,7 +278,8 @@ def train_pipeline(cfg: ArchConfig, mesh, split, opt_cfg: AdamWConfig,
                     split = split.with_plans((plan,) * n_cuts)
                     update = _cached_pipeline_update(
                         cfg, mesh, split, bwd_qcfg, opt_cfg, n_micro,
-                        micro_batch, seq, warmup_steps, total_steps)
+                        micro_batch, seq, warmup_steps, total_steps,
+                        lora_rank)
             state, loss, wb = update(state, tokens, labels)
             history.append(float(loss))
             wire_b = float(wb)
@@ -281,22 +305,27 @@ def _micro_batch_sds(n_micro, micro_batch, seq):
 
 
 def assert_links_match_hlo(name: str, hlo_text: str, mesh, wire: Dict,
-                           n_ticks: int, check_bwd: bool = False) -> None:
+                           n_ticks: int, check_bwd: bool = False,
+                           check_grad: bool = False) -> None:
     """Per-link wire assertion: for every link the static CommPayload
     bytes (x scan ticks) must match the HLO collective-permute bytes
     attributed to that link's device pairs, within 1%.  ``check_bwd``
-    additionally asserts the gradient-return direction (dst -> src)."""
+    additionally asserts the gradient-return direction (dst -> src).
+    ``check_grad`` adds each link's quantized adapter-grad return trip
+    (SplitLoRA) — one round trip per STEP, not per tick, so the grad
+    payload is added once to each direction's expected total."""
     from repro.launch.hlo_analysis import collective_permute_pairs
 
     by_link = schedules.pod_link_bytes(
         collective_permute_pairs(hlo_text), mesh)
     for (src, dst), entry in sorted(wire["links"].items()):
-        checks = [("fwd", (src, dst), entry["fwd"])]
+        grad_b = entry.get("grad", 0) if check_grad else 0
+        checks = [("fwd", (src, dst), entry["fwd"] * n_ticks + grad_b)]
         if check_bwd:
-            checks.append(("bwd", (dst, src), entry["bwd"]))
-        for direction, key, per_tick in checks:
+            checks.append(("bwd", (dst, src),
+                           entry["bwd"] * n_ticks + grad_b))
+        for direction, key, expected in checks:
             got = by_link.get(key, 0)
-            expected = per_tick * n_ticks
             rel = abs(got - expected) / max(expected, 1)
             print(f"[split-pipeline {name}] link {key[0]}->{key[1]} "
                   f"({direction}, {entry['quant']}-{entry['bits']}bit): "
@@ -602,6 +631,75 @@ def dryrun_train(arch: str = "llama3_2_3b", n_steps: int = 6,
     return dict(loss_history=history, wire_bytes_per_tick=wire_b)
 
 
+def dryrun_lora_train(arch: str = "llama3_2_3b", n_steps: int = 6,
+                      n_micro: int = 2, micro_batch: int = 4, seq: int = 32,
+                      n_stages: int = 2, lora_rank: int = 4,
+                      lr: float = 3e-2) -> Dict:
+    """SplitLoRA pipeline acceptance gate (ROADMAP item 4).
+
+    Trains the reduced pipeline with ``lora_rank`` adapters over the
+    quantized wire and asserts the three SplitLoRA invariants:
+
+    1. the loss decreases while every BASE weight stays bit-frozen
+       (host-side snapshot compare over all non-adapter leaves);
+    2. the AdamW moments are sized by the adapter params only —
+       ``param_bytes(opt["m"]) == adapter_bytes(adapters)``;
+    3. only the adapter leaves moved.
+    """
+    from repro.data.pipeline import make_pipeline
+    from repro.optim import param_bytes
+    from repro.peft import adapter_bytes, adapter_param_count
+
+    cfg = _homogeneous_cfg(arch, reduced=True, n_stages=n_stages)
+    mesh = jax.make_mesh((n_stages, 2), ("pod", "data"))
+    split = SplitConfig(quant=QuantConfig(method="rdfsq", bits=2),
+                        learnable_codec=False, n_stages=n_stages)
+    params0 = init_pipeline_params(jax.random.PRNGKey(0), cfg, n_stages,
+                                   lora_rank=lora_rank)
+    base0 = jax.tree_util.tree_map(
+        jnp.copy, {k: v for k, v in params0.items() if k != "adapters"})
+    pipe = make_pipeline(cfg, n_micro * micro_batch, seq, seed=0)
+
+    def batches():
+        for _ in range(n_steps):
+            b = next(pipe)
+            yield (b["tokens"].reshape(n_micro, micro_batch, seq),
+                   b["labels"].reshape(n_micro, micro_batch, seq))
+
+    opt_cfg = AdamWConfig(lr=lr, weight_decay=0.0)
+    params, opt, history, wire_b = train_pipeline(
+        cfg, mesh, split, opt_cfg, batches(), n_micro=n_micro,
+        micro_batch=micro_batch, seq=seq, params=params0,
+        lora_rank=lora_rank)
+
+    # 1. loss decreases over the quantized wire
+    assert history[-1] < history[0], \
+        f"LoRA pipeline loss did not decrease: {history}"
+    # 2. base weights bit-frozen
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_leaves_with_path(base0),
+            jax.tree_util.tree_leaves_with_path(
+                {k: v for k, v in params.items() if k != "adapters"})):
+        assert bool(jnp.array_equal(a, b)), \
+            f"base weight changed during LoRA training: {pa}"
+    # 3. moments sized by the adapters, not the base
+    ad_bytes = adapter_bytes(params["adapters"])
+    m_bytes = param_bytes(opt["m"])
+    assert m_bytes == ad_bytes, (
+        f"optimizer moments ({m_bytes} B) not sized by adapter params "
+        f"({ad_bytes} B)")
+    full_bytes = param_bytes(params0)
+    print(f"[split-pipeline-lora N={n_stages} r={lora_rank}] loss "
+          + " -> ".join(f"{v:.4f}" for v in history)
+          + f" | adapters {adapter_param_count(params['adapters'])} params"
+          f" ({ad_bytes / 1024:.1f} KiB), moments {m_bytes / 1024:.1f} KiB"
+          f" vs full-param {full_bytes / 1024:.1f} KiB"
+          f" ({full_bytes / max(ad_bytes, 1):.1f}x smaller opt state)")
+    return dict(loss_history=history, wire_bytes_per_tick=wire_b,
+                adapter_bytes=ad_bytes, opt_moment_bytes=m_bytes,
+                full_param_bytes=full_bytes)
+
+
 def main(smoke: bool = False) -> Dict:
     out: Dict = {}
     if smoke:
@@ -614,6 +712,7 @@ def main(smoke: bool = False) -> Dict:
         out["train"] = dryrun_train(n_steps=4, n_micro=2, micro_batch=4,
                                     seq=32, n_stages=2)
         out["adaptive"] = dryrun_train_adaptive(n_steps=4)
+        out["lora"] = dryrun_lora_train(n_steps=4)
         return out
     out = dryrun()
     out["heterogeneous"] = dryrun_heterogeneous(smoke=False, n_micro=4,
@@ -623,6 +722,7 @@ def main(smoke: bool = False) -> Dict:
     out["backward"] = dryrun_backward()
     out["train"] = dryrun_train()
     out["adaptive"] = dryrun_train_adaptive()
+    out["lora"] = dryrun_lora_train()
     return out
 
 

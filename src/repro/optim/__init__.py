@@ -1,6 +1,6 @@
 from repro.optim.adamw import (AdamWConfig, adamw_update, global_norm,
-                               init_opt_state)
+                               init_opt_state, opt_state_bytes, param_bytes)
 from repro.optim.schedule import constant, warmup_cosine
 
 __all__ = ["AdamWConfig", "adamw_update", "init_opt_state", "global_norm",
-           "warmup_cosine", "constant"]
+           "opt_state_bytes", "param_bytes", "warmup_cosine", "constant"]

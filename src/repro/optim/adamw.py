@@ -35,6 +35,25 @@ def init_opt_state(params, cfg: AdamWConfig) -> Dict[str, Any]:
     )
 
 
+def param_bytes(tree) -> int:
+    """Static byte size of a parameter pytree (arrays or SDS)."""
+    import math
+
+    return sum(math.prod(p.shape) * jnp.dtype(p.dtype).itemsize
+               for p in jax.tree_util.tree_leaves(tree))
+
+
+def opt_state_bytes(state: Dict[str, Any]) -> int:
+    """Static byte size of an AdamW state (m + v moments + step).
+
+    The SplitLoRA trainers assert this equals the moment bytes over the
+    *adapter* tree alone — the optimizer state must be sized by the
+    trainable (adapter) params, not the frozen base weights.
+    """
+    return (param_bytes(state["m"]) + param_bytes(state["v"])
+            + param_bytes(state["step"]))
+
+
 def global_norm(tree) -> jnp.ndarray:
     leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
               for x in jax.tree_util.tree_leaves(tree)]

@@ -1,0 +1,12 @@
+"""Parameter-efficient fine-tuning (SplitLoRA subsystem)."""
+from repro.peft.lora import (  # noqa: F401
+    adapter_bytes,
+    adapter_param_count,
+    apply_lora,
+    init_lora_params,
+    is_lora_site,
+    lora_delta,
+    lora_sites,
+    merge_lora,
+    unmerge_lora,
+)

@@ -1,0 +1,183 @@
+"""LoRA adapters over the stack executor's parameter trees.
+
+SplitLoRA (PAPERS.md) composes the split-learning setting with low-rank
+adapters: each side of the cut fine-tunes only ``rank``-dimensional
+factors ``A @ B`` added to its frozen projection weights, which shrinks
+the optimizer state, the checkpoint, and — on the hub's quantized
+gradient-return wire — the gradient traffic, the dominant systems cost
+of split fine-tuning.
+
+The subsystem is deliberately structural, not per-arch: a **LoRA site**
+is any parameter-tree leaf whose dict key starts with ``"w"`` and whose
+rank is >= 2, with the last two axes read as ``(d_in, d_out)`` and all
+leading axes (layer stacking, stage stacking, MoE experts) treated as
+batch.  That single rule covers GQA attention (``wq/wk/wv/wo``), MLA
+factored projections (``wq_a/wq_b/wkv_a/wkv_b``), SwiGLU MLPs
+(``w_gate/w_up/w_down``) and MoE expert banks, while skipping norms
+(``ln1``, ``q_norm``, ...), the fp32 MoE ``router``, and biases — so the
+whole arch zoo gets adapters without touching per-arch forward code.
+
+Adapters live in a nested dict *mirroring* the host tree: every site
+leaf ``w`` is replaced by ``{"lora_a": A, "lora_b": B}`` with
+``A: (*batch, d_in, r)`` (init ~ N(0, 1/d_in)) and ``B: (*batch, r,
+d_out)`` (init 0, so step 0 is the base model).  Because the adapter
+tree mirrors the host tree's key paths, it scans through
+``models/stack.py``'s ``run_stack`` as a sibling pytree — slicing the
+tuple ``(blocks, adapters)`` over the layer axis keeps the paths
+aligned.
+
+``apply_lora`` and ``merge_lora`` share one code path, so the merged
+weights are **bit-identical** to the effective weights the training
+forward used — ``ServeEngine``/``generate`` on merged params is
+token-exact vs the unmerged adapter forward, with zero runtime
+overhead.  ``unmerge_lora`` subtracts the same delta (recovers base to
+fp tolerance, not bit-exact).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Path = Tuple[str, ...]
+
+
+def _key_name(entry) -> str:
+    """Best-effort name of one path entry (DictKey / GetAttrKey / index)."""
+    for attr in ("key", "name", "idx"):
+        if hasattr(entry, attr):
+            return str(getattr(entry, attr))
+    return str(entry)
+
+
+def is_lora_site(name: str, leaf) -> bool:
+    """A projection weight: dict key ``w*`` with >= 2 dims.
+
+    The last two axes are read as ``(d_in, d_out)``; anything in front
+    (stage / layer / expert axes) broadcasts through the low-rank
+    matmul.  Norm scales, the MoE ``router`` and biases don't match.
+    """
+    return name.startswith("w") and getattr(leaf, "ndim", 0) >= 2
+
+
+def lora_sites(tree) -> List[Tuple[Path, Any]]:
+    """``(path, leaf)`` for every LoRA site in ``tree`` (stable order)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        names = tuple(_key_name(p) for p in path)
+        if names and is_lora_site(names[-1], leaf):
+            out.append((names, leaf))
+    return out
+
+
+def _nest_set(d: Dict, path: Path, value) -> None:
+    for name in path[:-1]:
+        d = d.setdefault(name, {})
+    d[path[-1]] = value
+
+
+def init_lora_params(key, tree, rank: int, *, b_scale: float = 0.0):
+    """Adapter tree mirroring ``tree``'s LoRA sites.
+
+    ``A ~ N(0, 1/d_in)``, ``B = 0`` (or ``b_scale``-scaled normal when a
+    test wants a nonzero delta), both in the site leaf's dtype.  Works
+    under ``jax.eval_shape`` for spec derivation.
+    """
+    if rank <= 0:
+        raise ValueError(f"lora rank must be positive, got {rank}")
+    sites = lora_sites(tree)
+    if not sites:
+        raise ValueError("no LoRA sites (w*, ndim>=2) in tree")
+    keys = jax.random.split(key, 2 * len(sites))
+    adapters: Dict = {}
+    for i, (path, w) in enumerate(sites):
+        d_in = w.shape[-2]
+        a = (jax.random.normal(keys[2 * i], w.shape[:-1] + (rank,))
+             * d_in ** -0.5).astype(w.dtype)
+        if b_scale:
+            b = (jax.random.normal(keys[2 * i + 1],
+                                   w.shape[:-2] + (rank, w.shape[-1]))
+                 * b_scale).astype(w.dtype)
+        else:
+            b = jnp.zeros(w.shape[:-2] + (rank, w.shape[-1]), w.dtype)
+        _nest_set(adapters, path, {"lora_a": a, "lora_b": b})
+    return adapters
+
+
+def lora_delta(site: Dict, scale: float) -> jax.Array:
+    """``scale * A @ B`` with leading axes batched (fp32 accumulate)."""
+    a, b = site["lora_a"], site["lora_b"]
+    d = jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+    return (scale * d).astype(a.dtype)
+
+
+def _adapter_map(adapters) -> Dict[Path, Dict]:
+    """Site path -> ``{"lora_a", "lora_b"}`` from an adapter tree."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(adapters)
+    sites: Dict[Path, Dict] = {}
+    for path, leaf in flat:
+        names = tuple(_key_name(p) for p in path)
+        if names[-1] not in ("lora_a", "lora_b"):
+            raise ValueError(f"not an adapter tree: leaf {names}")
+        sites.setdefault(names[:-1], {})[names[-1]] = leaf
+    return sites
+
+
+def _fold(tree, adapters, scale: float, sign: int):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    sites = _adapter_map(adapters)
+    seen = set()
+    leaves = []
+    for path, w in flat:
+        names = tuple(_key_name(p) for p in path)
+        site = sites.get(names)
+        if site is None:
+            leaves.append(w)
+        else:
+            seen.add(names)
+            leaves.append(
+                (w + sign * lora_delta(site, scale)).astype(w.dtype))
+    missing = set(sites) - seen
+    if missing:
+        raise ValueError(f"adapter sites missing from tree: {missing}")
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def apply_lora(tree, adapters, *, scale: float = 1.0):
+    """Effective weights ``w + scale * A @ B`` (same math as merge).
+
+    Used inside the training forward: base leaves stay frozen, gradients
+    flow to the adapter factors only.  ``scale`` defaults to 1.0, i.e.
+    ``alpha == rank``.
+    """
+    return _fold(tree, adapters, scale, +1)
+
+
+def merge_lora(tree, adapters, *, scale: float = 1.0):
+    """Fold adapters into the base weights for zero-overhead serving.
+
+    Identical arithmetic to :func:`apply_lora`, so the merged forward is
+    bit-exact vs the unmerged (apply-path) forward.
+    """
+    return _fold(tree, adapters, scale, +1)
+
+
+def unmerge_lora(tree, adapters, *, scale: float = 1.0):
+    """Subtract the adapter delta (recovers base to fp tolerance)."""
+    return _fold(tree, adapters, scale, -1)
+
+
+def adapter_param_count(adapters) -> int:
+    import math
+
+    return sum(math.prod(a.shape)
+               for a in jax.tree_util.tree_leaves(adapters))
+
+
+def adapter_bytes(adapters) -> int:
+    import math
+
+    return sum(math.prod(a.shape) * jnp.dtype(a.dtype).itemsize
+               for a in jax.tree_util.tree_leaves(adapters))

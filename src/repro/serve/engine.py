@@ -58,9 +58,17 @@ class ServeEngine:
                  split_wire: Optional[QuantConfig] = None,
                  split_wire_budget_bits: Optional[float] = None,
                  split_plan_groups: int = 8,
-                 impl: Optional[str] = None):
+                 impl: Optional[str] = None,
+                 lora_adapters=None, lora_scale: float = 1.0):
         if cfg.modality == "audio":
             raise NotImplementedError("engine serves text/vlm configs")
+        if lora_adapters is not None:
+            # SplitLoRA serving: fold the adapters into the base weights
+            # ONCE at construction (merge == apply bit-exactly, so merged
+            # decoding is token-exact vs the unmerged forward) — steady
+            # state serving pays zero adapter overhead per token.
+            from repro.peft import merge_lora
+            params = merge_lora(params, lora_adapters, scale=lora_scale)
         self.params = params
         self.cfg = cfg
         self.page_size = page_size

@@ -55,6 +55,49 @@ def apply_gradients(state: TrainState, grads, opt_cfg: AdamWConfig, *,
                       step=state.step + 1), opt_metrics
 
 
+def init_adapter_state(params, opt_cfg: AdamWConfig) -> TrainState:
+    """SplitLoRA TrainState: optimizer moments over adapters ONLY.
+
+    ``params`` must carry an ``"adapters"`` entry (see
+    ``core.split_stage.init_stage_params(lora_rank=...)``).  The AdamW
+    state is built from the adapter subtree alone, so its byte size —
+    the thing SplitLoRA shrinks — is proportional to the adapter params,
+    not the frozen base weights (asserted by the LoRA dry-runs via
+    ``optim.opt_state_bytes``).
+    """
+    if "adapters" not in params:
+        raise ValueError("init_adapter_state needs params['adapters']")
+    return TrainState(params=params,
+                      opt=init_opt_state(params["adapters"], opt_cfg),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def apply_adapter_gradients(state: TrainState, adapter_grads,
+                            opt_cfg: AdamWConfig, *,
+                            warmup_steps: int = 0,
+                            total_steps: int = 0) -> Tuple[TrainState, Dict]:
+    """Adapter-only AdamW: steps ``params['adapters']``, base frozen.
+
+    The counterpart of :func:`apply_gradients` for SplitLoRA runs:
+    ``adapter_grads`` mirrors ``state.params['adapters']`` (and nothing
+    else), the moments in ``state.opt`` were built over the adapter
+    subtree, and every non-adapter leaf of ``state.params`` is returned
+    untouched (bit-frozen base weights).
+    """
+    ad = state.params["adapters"]
+    assert (jax.tree_util.tree_structure(state.opt["m"])
+            == jax.tree_util.tree_structure(ad)), \
+        "optimizer state is not sized by the adapter params"
+    lr_scale = warmup_cosine(state.step, warmup_steps=warmup_steps,
+                             total_steps=total_steps) \
+        if total_steps else 1.0
+    new_ad, new_opt, opt_metrics = adamw_update(
+        ad, adapter_grads, state.opt, opt_cfg, lr_scale)
+    new_params = dict(state.params, adapters=new_ad)
+    return TrainState(params=new_params, opt=new_opt,
+                      step=state.step + 1), opt_metrics
+
+
 def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, *,
                     window: Optional[int] = None,
                     total_steps: int = 10000,
