@@ -48,13 +48,44 @@ def _next_lever(r) -> str:
     return "already compute-bound: larger per-chip batch or int8 matmuls"
 
 
+def weight_bytes_rows():
+    """Analytic per-precision serve-time weight HBM bytes per decode tick.
+
+    The ``repro.wq`` packed stores shrink exactly this stream; rows give
+    the dense-bf16 baseline and the int4/int3 (group 128) packed bytes +
+    cut ratios per arch, from the same ``param_counts`` the roofline
+    memory term uses.  Independent of dry-run artifacts.
+    """
+    from repro.configs import get_config
+    from repro.launch.roofline import decode_weight_bytes
+
+    table = {}
+    for arch in ("tinyllava", "llama3_2_3b", "granite_3_8b"):
+        cfg = get_config(arch)
+        dense = decode_weight_bytes(cfg, bits=16)
+        row = {"bf16": dense}
+        for bits in (4, 3):
+            packed = decode_weight_bytes(cfg, bits=bits, group=128)
+            row[f"int{bits}"] = packed
+            row[f"int{bits}_ratio"] = dense / packed
+        table[arch] = row
+        emit(f"roofline/weight_bytes/{arch}", dense / 2 ** 20,
+             f"bf16_MiB={dense / 2**20:.1f};"
+             f"int4_MiB={row['int4'] / 2**20:.1f};"
+             f"int4_cut={row['int4_ratio']:.2f}x;"
+             f"int3_MiB={row['int3'] / 2**20:.1f};"
+             f"int3_cut={row['int3_ratio']:.2f}x;group=128")
+    return table
+
+
 def run():
+    wb = weight_bytes_rows()
     results = load_results()
     if not results:
         emit("roofline/missing", 0.0,
              "no dry-run artifacts; run python -m repro.launch.dryrun --all")
-        return {}
-    table = {}
+        return {"weight_bytes": wb}
+    table = {"weight_bytes": wb}
     for r in results:
         rl = r["roofline"]
         mem_gib = r["memory"]["peak_adjusted_per_device"] / 2 ** 30

@@ -13,7 +13,8 @@ import traceback
 
 from benchmarks import (attention_bench, fig4_attack, lora_bench,
                         quant_bench, roofline, serve_bench, table1_entropy,
-                        table2_bits, table3_performance, table4_comm)
+                        table2_bits, table3_performance, table4_comm,
+                        wq_bench)
 
 SUITES = {
     "table1": lambda fast: table1_entropy.run(),
@@ -27,6 +28,7 @@ SUITES = {
     "quant": lambda fast: quant_bench.run(fast=fast),
     "lora": lambda fast: lora_bench.run(fast=fast),
     "serve": lambda fast: serve_bench.run(fast=fast),
+    "wq": lambda fast: wq_bench.run(fast=fast),
 }
 
 

@@ -34,10 +34,17 @@ def run_engine(cfg, params, args, key):
     page_size = 8
     max_target = n_img + args.prompt_len + args.new_tokens
     n_pages = 1 + args.batch * (-(-max_target // page_size))
+    wq_calib = None
+    if args.weight_quant:
+        # small GPTQ calibration sample; without it the engine falls back
+        # to round-to-nearest
+        from repro.data.pipeline import make_pipeline
+        wq_calib = next(make_pipeline(cfg, 4, 32))
     eng = ServeEngine(
         params, cfg, n_slots=max(2, args.batch // 2), page_size=page_size,
         n_pages=n_pages, window=args.window,
-        split_wire=cfg.split.quant if args.split_serve else None)
+        split_wire=cfg.split.quant if args.split_serve else None,
+        weight_quant=args.weight_quant, wq_calib=wq_calib)
     for i in range(args.batch):
         toks = jax.random.randint(jax.random.fold_in(rng[0], i),
                                   (args.prompt_len,), 0, cfg.vocab_size)
@@ -62,6 +69,11 @@ def run_engine(cfg, params, args, key):
     if args.split_serve:
         print(f"  split-serve wire: {eng.stats['wire_bytes']} bytes of "
               f"quantized connector activations shipped")
+    if args.weight_quant:
+        d, p = eng.stats["weight_bytes_dense"], \
+            eng.stats["weight_bytes_packed"]
+        print(f"  {args.weight_quant} weights: {p} B packed vs {d} B "
+              f"dense ({d / p:.2f}x smaller, GPTQ-calibrated)")
 
 
 def main():
@@ -77,6 +89,10 @@ def main():
     ap.add_argument("--split-serve", action="store_true",
                     help="(vlm archs, with --engine) ship connector "
                          "activations over the quantized wire")
+    ap.add_argument("--weight-quant", default=None,
+                    choices=("int4", "int3"),
+                    help="(with --engine) serve from GPTQ-quantized "
+                         "packed weights (repro.wq)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -87,6 +103,8 @@ def main():
             ap.error("--split-serve needs a vlm arch (e.g. tinyllava)")
         run_engine(cfg, params, args, key)
         return
+    if args.weight_quant:
+        ap.error("--weight-quant needs --engine")
     cache_len = args.prompt_len + args.new_tokens \
         if args.window is None else args.window
 

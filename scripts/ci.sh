@@ -56,3 +56,10 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 # training rows; writes BENCH_lora.json.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m benchmarks.run --fast --only lora
+
+# Weight-only quantization smoke: asserts the int4/g128 packed store is
+# <= 0.27x the bf16 stack, the compiled server-stage ENTRY-parameter
+# weight bytes drop >= 3.7x, and GPTQ held-out KL-to-dense beats RTN at
+# int3 (and stays within tolerance at int4); writes BENCH_wq.json.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m benchmarks.run --fast --only wq

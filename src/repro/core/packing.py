@@ -86,10 +86,31 @@ def pack_bits(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
 
 
 def unpack_bits(words: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
-    """Inverse of :func:`pack_bits`; returns the first ``n`` codes (uint8)."""
+    """Inverse of :func:`pack_bits`; returns the first ``n`` codes (uint8).
+
+    ``words`` must hold exactly the bitstream :func:`pack_bits` emitted for
+    ``n`` codes: at least ``packed_size(n, bits)`` bytes (anything shorter
+    would silently decode the missing tail as zeros — a corruption, not a
+    ragged shape) and at most the 8-code-group-rounded length (anything
+    longer means ``n``/``bits`` disagree with the producer).  Ragged
+    ``n % 8 != 0`` tails are exact: the final byte's unused high bits are
+    the producer's zero padding.
+    """
     _check_bits(bits)
     flat = words.reshape(-1)
     n_groups = (n + _GROUP - 1) // _GROUP
+    need = packed_size(n, bits)
+    if flat.shape[0] < need:
+        raise ValueError(
+            f"unpack_bits: word stream has {flat.shape[0]} bytes but "
+            f"{n} codes at {bits} bits need packed_size = {need}; "
+            f"refusing to zero-fill the missing tail")
+    if flat.shape[0] > n_groups * bits:
+        raise ValueError(
+            f"unpack_bits: word stream has {flat.shape[0]} bytes but "
+            f"{n} codes at {bits} bits occupy at most "
+            f"{n_groups * bits} (group-rounded) — n/bits disagree with "
+            f"the producer")
     pad = n_groups * bits - flat.shape[0]
     if pad > 0:
         flat = jnp.pad(flat, (0, pad))

@@ -153,6 +153,29 @@ def head_ce(cfg: ArchConfig, params: Dict, h: jnp.ndarray,
     return cross_entropy(logits, labels)
 
 
+def quantized_stage_blocks(params: Dict, stage: StageProgram,
+                           weight_quant: str = "int4", *, group: int = 128,
+                           hessians: Optional[Dict] = None):
+    """Packed block tree for serving one stage to inference-only clients.
+
+    Slices the stage's layer stack out of the stage-stacked ``blocks``
+    tree and quantizes every structural w* site (``repro.wq``), so the
+    hub's shared server stage answers inference clients from int4/int3
+    weights while the trainable fp stack stays untouched.  The result
+    drops into :func:`run_blocks` / :func:`head_ce` unchanged — the
+    packed stores serve their sites through ``x @ w`` like the dense
+    leaves they replace.  Returns ``(blocks, report)`` with the
+    per-site (dense_bytes, packed_bytes) report.
+    """
+    from repro import wq
+
+    blocks = jax.tree_util.tree_map(lambda v: v[stage.index],
+                                    params["blocks"])
+    wcfg = wq.parse_weight_quant(weight_quant, group=group)
+    return wq.quantize_tree(blocks, wcfg, stacked_axes=1,
+                            hessians=hessians)
+
+
 # ---------------------------------------------------------------------------
 # stage-stacked parameters + shard_map specs
 # ---------------------------------------------------------------------------

@@ -86,6 +86,58 @@ def rdfsq_dequantize_ref(packed: jnp.ndarray, lo, hi, bits: int,
 
 
 # ---------------------------------------------------------------------------
+# weight-only packed dequant-matmul (repro.wq)
+# ---------------------------------------------------------------------------
+#
+# The packed weight store lays the exact core.packing bitstream down the
+# input axis PER OUTPUT COLUMN: 8 consecutive codes of a column span
+# exactly ``bits`` whole bytes.  The oracle mirrors that layout with its
+# own uint32-word arithmetic (independent of both core.packing and the
+# Pallas kernel).
+
+def wq_unpack_ref(words: jnp.ndarray, bits: int, d_in: int) -> jnp.ndarray:
+    """(packed_rows, C) uint8 column bitstreams -> (d_in, C) uint8 codes."""
+    nb = (d_in + 7) // 8  # 8-code groups per column
+    c = words.shape[1]
+    pad = nb * bits - words.shape[0]
+    w = jnp.pad(words, ((0, max(pad, 0)), (0, 0))).astype(jnp.uint32)
+    w = w.reshape(nb, bits, c)
+    byte_shifts = (jnp.arange(bits, dtype=jnp.uint32) * 8)[None, :, None]
+    word32 = (w << byte_shifts).sum(axis=1)  # (nb, C): 8 codes each
+    code_shifts = (jnp.arange(8, dtype=jnp.uint32) * bits)[None, :, None]
+    mask = jnp.uint32(2 ** bits - 1)
+    codes = (word32[:, None, :] >> code_shifts) & mask
+    return codes.reshape(nb * 8, c)[:d_in].astype(jnp.uint8)
+
+
+def wq_dequant_ref(words: jnp.ndarray, scales: jnp.ndarray,
+                   mins: jnp.ndarray, *, bits: int, group: int,
+                   d_in: int) -> jnp.ndarray:
+    """fp32 (d_in, C) weights in STORAGE channel order."""
+    codes = wq_unpack_ref(words, bits, d_in).astype(jnp.float32)
+    n_groups, c = scales.shape
+    pad = n_groups * group - d_in
+    cf = jnp.pad(codes, ((0, pad), (0, 0))).reshape(n_groups, group, c)
+    w = cf * scales.astype(jnp.float32)[:, None, :] \
+        + mins.astype(jnp.float32)[:, None, :]
+    return w.reshape(n_groups * group, c)[:d_in]
+
+
+def wq_matmul_ref(x2d: jnp.ndarray, words: jnp.ndarray, scales: jnp.ndarray,
+                  mins: jnp.ndarray, *, bits: int, group: int,
+                  d_in: int) -> jnp.ndarray:
+    """(M, d_in) @ dequant(words) -> (M, C) fp32 (fp32 accumulation).
+
+    The contraction happens in the activation dtype (bf16 activations
+    stay bf16 operands, like the dense ``x @ w.astype(x.dtype)`` path)
+    with an fp32 accumulator — the same convention as the Pallas kernel.
+    """
+    w = wq_dequant_ref(words, scales, mins, bits=bits, group=group,
+                       d_in=d_in).astype(x2d.dtype)
+    return jnp.matmul(x2d, w, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
 # NF-b blockwise quantization
 # ---------------------------------------------------------------------------
 

@@ -377,6 +377,30 @@ def analyze(hlo: str) -> Dict:
     )
 
 
+def entry_parameter_bytes(hlo: str) -> int:
+    """Total bytes of the ENTRY computation's parameter instructions.
+
+    For a jitted function this is what the executable streams in per call
+    — for a weights-consuming forward, the weight HBM read floor.  The
+    wq benchmark compares this between the dense and the packed stacks to
+    assert the int4 weight-byte cut survives compilation (codes stay u8,
+    scales f16 — nothing silently widened by XLA).
+    """
+    comps, entry = split_computations(hlo)
+    total = 0
+    for line in comps.get(entry, []):
+        m = _RESULT_RE.match(line.strip())
+        if not m:
+            continue
+        rhs = m.group(2)
+        opm = _OP_NAME_RE.search(rhs)
+        if not opm or opm.group(1) != "parameter":
+            continue
+        _, b = _shape_elems_bytes(rhs.split("(")[0])
+        total += b
+    return total
+
+
 def collective_bytes(hlo: str) -> Tuple[int, Dict[str, int]]:
     res = analyze(hlo)
     return res["collective_bytes"], res["collective_by_op"]

@@ -87,6 +87,34 @@ def param_counts(cfg: ArchConfig) -> Dict[str, float]:
                 embedding=embed, non_embedding_total=total + head)
 
 
+def weight_stream_bits(bits: int, group: int) -> float:
+    """Serve-time HBM bits per weight element for a packed store.
+
+    ``bits`` code bits plus the amortized fp16 scale+min per ``group``
+    elements (``repro.wq`` grouped-affine layout).  bf16 is the dense
+    baseline: 16 bits, no side info.
+    """
+    if bits >= 16:
+        return float(bits)
+    return bits + 2 * 16.0 / group
+
+
+def decode_weight_bytes(cfg: ArchConfig, bits: int = 16,
+                        group: int = 128) -> float:
+    """Weight HBM bytes one decode tick streams per chip (batch-free).
+
+    Every decode step reads the whole non-embedding stack once; the
+    packable w* matmul sites stream at ``weight_stream_bits`` while the
+    head and norms stay at the compute dtype.  This is the roofline's
+    memory-term floor for serving — the quantity ``repro.wq`` shrinks.
+    """
+    counts = param_counts(cfg)
+    blocks = counts["non_embedding_total"] - cfg.d_model * cfg.vocab_size * \
+        (cfg.n_codebooks or 1)
+    head = counts["non_embedding_total"] - blocks
+    return blocks * weight_stream_bits(bits, group) / 8.0 + head * 2.0
+
+
 def model_flops(cfg: ArchConfig, shape) -> float:
     """6 * N_active * D (forward+backward for train; 2*N*D for inference)."""
     counts = param_counts(cfg)

@@ -40,36 +40,21 @@ from typing import Any, Dict, List, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.utils.tree import is_weight_site, key_name, weight_sites
+
 Path = Tuple[str, ...]
 
+_key_name = key_name
 
-def _key_name(entry) -> str:
-    """Best-effort name of one path entry (DictKey / GetAttrKey / index)."""
-    for attr in ("key", "name", "idx"):
-        if hasattr(entry, attr):
-            return str(getattr(entry, attr))
-    return str(entry)
-
-
-def is_lora_site(name: str, leaf) -> bool:
-    """A projection weight: dict key ``w*`` with >= 2 dims.
-
-    The last two axes are read as ``(d_in, d_out)``; anything in front
-    (stage / layer / expert axes) broadcasts through the low-rank
-    matmul.  Norm scales, the MoE ``router`` and biases don't match.
-    """
-    return name.startswith("w") and getattr(leaf, "ndim", 0) >= 2
+# The structural site rule is shared with repro.wq (weight-only serving
+# quantization selects the exact same ``w*``/ndim>=2 leaves it adapts) —
+# one definition in utils.tree, aliased here for the established names.
+is_lora_site = is_weight_site
 
 
 def lora_sites(tree) -> List[Tuple[Path, Any]]:
     """``(path, leaf)`` for every LoRA site in ``tree`` (stable order)."""
-    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
-    out = []
-    for path, leaf in flat:
-        names = tuple(_key_name(p) for p in path)
-        if names and is_lora_site(names[-1], leaf):
-            out.append((names, leaf))
-    return out
+    return weight_sites(tree)
 
 
 def _nest_set(d: Dict, path: Path, value) -> None:

@@ -59,7 +59,10 @@ class ServeEngine:
                  split_wire_budget_bits: Optional[float] = None,
                  split_plan_groups: int = 8,
                  impl: Optional[str] = None,
-                 lora_adapters=None, lora_scale: float = 1.0):
+                 lora_adapters=None, lora_scale: float = 1.0,
+                 weight_quant: Optional[str] = None, wq_group: int = 128,
+                 wq_act_order: bool = False,
+                 wq_calib: Optional[Dict] = None):
         if cfg.modality == "audio":
             raise NotImplementedError("engine serves text/vlm configs")
         if lora_adapters is not None:
@@ -69,6 +72,24 @@ class ServeEngine:
             # state serving pays zero adapter overhead per token.
             from repro.peft import merge_lora
             params = merge_lora(params, lora_adapters, scale=lora_scale)
+        self.wq_report = None
+        if weight_quant is not None:
+            # Weight-only serving quantization (ROADMAP item 5): replace
+            # every structural w* matmul site in the stacks with a packed
+            # int4/int3 store AFTER the LoRA merge (the adapters must fold
+            # into the dense weights before they are frozen into codes).
+            # With a calibration batch the quantizer runs GPTQ error
+            # compensation off per-site Hessians; without one it falls
+            # back to round-to-nearest.
+            from repro import wq
+            wcfg = wq.parse_weight_quant(weight_quant, group=wq_group,
+                                         act_order=wq_act_order)
+            hessians = None
+            if wq_calib is not None:
+                hessians = wq.collect_hessians(params, cfg, wq_calib,
+                                               window=window)
+            params, self.wq_report = wq.quantize_params(params, wcfg,
+                                                        hessians=hessians)
         self.params = params
         self.cfg = cfg
         self.page_size = page_size
@@ -107,6 +128,11 @@ class ServeEngine:
         self.stats = dict(wire_bytes=0, prefill_batches=0, decode_ticks=0,
                           tokens_emitted=0, admitted=0, retired=0,
                           page_table_buckets=set())
+        if self.wq_report is not None:
+            self.stats["weight_bytes_dense"] = sum(
+                d for d, _ in self.wq_report.values())
+            self.stats["weight_bytes_packed"] = sum(
+                p for _, p in self.wq_report.values())
 
     # -- request intake -------------------------------------------------
     def submit(self, tokens: List[int], *, max_new: int,

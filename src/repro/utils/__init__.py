@@ -1,5 +1,6 @@
 from repro.utils.barrier import grad_safe_barrier
-from repro.utils.tree import tree_bytes, tree_count, cast_tree, ste
+from repro.utils.tree import (cast_tree, is_weight_site, ste, tree_bytes,
+                              tree_count, weight_sites)
 
 __all__ = ["grad_safe_barrier", "tree_bytes", "tree_count", "cast_tree",
-           "ste"]
+           "ste", "is_weight_site", "weight_sites"]

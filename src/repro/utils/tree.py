@@ -1,8 +1,12 @@
 """Small pytree / numeric helpers shared across the framework."""
 from __future__ import annotations
 
+from typing import Any, List, Tuple
+
 import jax
 import jax.numpy as jnp
+
+Path = Tuple[str, ...]
 
 
 def tree_bytes(tree) -> int:
@@ -29,6 +33,43 @@ def cast_tree(tree, dtype):
         return x
 
     return jax.tree_util.tree_map(_cast, tree)
+
+
+# ---------------------------------------------------------------------------
+# structural weight-site selection (shared by repro.peft and repro.wq)
+# ---------------------------------------------------------------------------
+
+def key_name(entry) -> str:
+    """Best-effort name of one path entry (DictKey / GetAttrKey / index)."""
+    for attr in ("key", "name", "idx"):
+        if hasattr(entry, attr):
+            return str(getattr(entry, attr))
+    return str(entry)
+
+
+def is_weight_site(name: str, leaf) -> bool:
+    """A projection weight: dict key ``w*`` with >= 2 dims.
+
+    The single structural rule both ``repro.peft`` (LoRA adapter sites)
+    and ``repro.wq`` (weight-only quantization sites) select by: the last
+    two axes are read as ``(d_in, d_out)`` and anything in front (stage /
+    layer / expert axes) is batch.  Covers GQA (``wq/wk/wv/wo``), MLA
+    factored projections, SwiGLU (``w_gate/w_up/w_down``), RWKV channel
+    mix and MoE expert banks, while skipping norm scales (``ln*``,
+    ``q_norm``), the fp32 MoE ``router`` and biases.
+    """
+    return name.startswith("w") and getattr(leaf, "ndim", 0) >= 2
+
+
+def weight_sites(tree) -> List[Tuple[Path, Any]]:
+    """``(path, leaf)`` for every weight site in ``tree`` (stable order)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        names = tuple(key_name(p) for p in path)
+        if names and is_weight_site(names[-1], leaf):
+            out.append((names, leaf))
+    return out
 
 
 def ste(x: jax.Array, x_hat: jax.Array) -> jax.Array:

@@ -1,0 +1,24 @@
+"""Weight-only serving quantization (GPTQ-style) — ROADMAP item 5.
+
+The wire compressors point at *activations*; this subsystem points the
+same machinery (exact odd-width bitstream packers, grouped scales,
+importance-sorted channel permutation) at the serving stacks' *weights*:
+post-training int4/int3 quantization with optional Hessian-based GPTQ
+error compensation, stored packed (:class:`PackedLinear`) and
+dequantized inside a fused Pallas matmul (``kernels/wq_kernel.py``,
+``REPRO_WQ_IMPL`` dispatch, jnp oracle in ``kernels/ref.py``).
+"""
+from repro.wq.calibrate import collect_hessians
+from repro.wq.ops import resolve_impl, wq_matmul
+from repro.wq.packed import PackedLinear
+from repro.wq.quantize import (QUANTIZED_SUBTREES, WqConfig, gptq_quantize,
+                               packed_tree_bytes, parse_weight_quant,
+                               quantize_linear, quantize_params,
+                               quantize_tree, rtn_quantize)
+
+__all__ = [
+    "PackedLinear", "WqConfig", "QUANTIZED_SUBTREES", "collect_hessians",
+    "gptq_quantize", "packed_tree_bytes", "parse_weight_quant",
+    "quantize_linear", "quantize_params", "quantize_tree", "resolve_impl",
+    "rtn_quantize", "wq_matmul",
+]

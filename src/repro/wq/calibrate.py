@@ -1,0 +1,139 @@
+"""GPTQ calibration: per-site Hessians from a small activation sample.
+
+GPTQ needs ``H = X^T X`` of each projection's *inputs* on calibration
+data.  The stacks normally execute through ``lax.scan`` (one trace per
+segment), where per-site side effects are impossible — so calibration
+re-runs the blocks EAGERLY, one layer at a time, with every packable w*
+site wrapped in a :class:`_Tap`: an object that satisfies the structural
+weight contract (``astype`` + ``x @ w``) and accumulates ``X^T X`` in
+numpy the moment the forward consumes it.  No per-arch code: the same
+``x @ p["w*"].astype(dt)`` convention that lets :class:`PackedLinear`
+serve the weights lets the tap observe them.
+
+Supported segment types are exactly the serving engine's (``dense`` /
+``moe`` / ``shared_attn``); MoE expert banks are einsum sites and are
+neither tapped nor quantized.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import split as split_mod
+from repro.models import transformer as tf
+from repro.utils.tree import is_weight_site
+
+__all__ = ["collect_hessians"]
+
+_CALIB_SEGMENTS = ("dense", "moe", "shared_attn")
+
+
+class _Tap:
+    """Weight wrapper recording ``X^T X`` of everything matmul'd into it."""
+
+    def __init__(self, w, sink: np.ndarray):
+        self._w = w
+        self._sink = sink
+        self._dt = w.dtype
+
+    @property
+    def ndim(self) -> int:
+        return self._w.ndim
+
+    @property
+    def shape(self):
+        return self._w.shape
+
+    def astype(self, dtype):
+        self._dt = dtype
+        return self
+
+    def __rmatmul__(self, x):
+        x2 = np.asarray(x, dtype=np.float32).reshape(-1, self.shape[-2])
+        self._sink += x2.T @ x2
+        return x @ self._w.astype(self._dt)
+
+
+def _tap_block(p: Dict, path: Tuple[str, ...], layer: Optional[int],
+               sinks: Dict) -> Dict:
+    """Per-layer block params with every 2-D w* leaf wrapped in a tap."""
+    out = {}
+    for k, v in p.items():
+        if isinstance(v, dict):
+            out[k] = _tap_block(v, path + (k,), layer, sinks)
+        elif is_weight_site(k, v) and v.ndim == 2:
+            sink = sinks.setdefault(
+                (path + (k,), layer),
+                np.zeros((v.shape[-2], v.shape[-2]), np.float32))
+            out[k] = _Tap(v, sink)
+        else:
+            out[k] = v
+    return out
+
+
+def collect_hessians(params: Dict, cfg: ArchConfig, batch: Dict, *,
+                     window: Optional[int] = None) -> Dict:
+    """Run ``batch`` through the stacks eagerly, tapping every w* site.
+
+    Returns ``{site_path: H}`` keyed by the full params path (e.g.
+    ``("server", "seg0", "attn", "wq")``) with ``H`` layer-stacked
+    ``(n, d_in, d_in)`` for stacked segments and ``(d_in, d_in)`` for
+    the shared block — exactly the shapes
+    :func:`repro.wq.quantize.quantize_params` consumes.
+    """
+    segs = cfg.client_server_segments()
+    for side_segs in segs:
+        for t, _n in side_segs:
+            if t not in _CALIB_SEGMENTS:
+                raise NotImplementedError(
+                    f"wq calibration supports {_CALIB_SEGMENTS} segments "
+                    f"(the serving engine's); got {t!r}")
+
+    x = tf._embed_inputs(params, cfg, batch)
+    emb0 = x
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    sinks: Dict = {}
+
+    def run_side(side: str, side_segs, x):
+        for i, (t, n) in enumerate(side_segs):
+            if t == "shared_attn":
+                p = _tap_block(params["shared_attn"], ("shared_attn",),
+                               None, sinks)
+                x, _, _ = tf.block_forward(cfg, t, p, x,
+                                           positions=positions,
+                                           window=window, emb0=emb0)
+                continue
+            stacked = params[side][f"seg{i}"]
+            for layer in range(n):
+                p_l = {k: _slice_layer(v, layer) for k, v in stacked.items()}
+                p = _tap_block(p_l, (side, f"seg{i}"), layer, sinks)
+                x, _, _ = tf.block_forward(cfg, t, p, x,
+                                           positions=positions,
+                                           window=window, emb0=emb0)
+        return x
+
+    client_segs, server_segs = segs
+    x = run_side("client", client_segs, x)
+    x, _ = split_mod.compressor_roundtrip(params.get("codec"), cfg.split, x)
+    run_side("server", server_segs, x)
+
+    # stack per-layer sinks back into the site-path keyed dict
+    out: Dict[Tuple[str, ...], np.ndarray] = {}
+    by_path: Dict[Tuple[str, ...], Dict[Optional[int], np.ndarray]] = {}
+    for (path, layer), h in sinks.items():
+        by_path.setdefault(path, {})[layer] = h
+    for path, layers in by_path.items():
+        if None in layers:
+            out[path] = layers[None]
+        else:
+            out[path] = np.stack([layers[i] for i in sorted(layers)])
+    return out
+
+
+def _slice_layer(v, layer: int):
+    if isinstance(v, dict):
+        return {k: _slice_layer(x, layer) for k, x in v.items()}
+    return v[layer]

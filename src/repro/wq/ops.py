@@ -1,0 +1,56 @@
+"""Backend dispatch for the packed dequant-matmul.
+
+Same ladder as attention (``REPRO_ATTN_IMPL``) and the wire codecs
+(``REPRO_QUANT_IMPL``): explicit ``impl=`` kwarg beats the
+``REPRO_WQ_IMPL`` env var beats the backend default (Pallas on TPU, the
+jnp oracle elsewhere; the Pallas path runs ``interpret=True`` off-TPU so
+parity tests exercise the kernel everywhere).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref, wq_kernel
+from repro.utils.dispatch import resolve_backend_impl
+
+__all__ = ["resolve_impl", "wq_matmul"]
+
+
+def resolve_impl(impl: Optional[str] = None) -> str:
+    return resolve_backend_impl(impl, "REPRO_WQ_IMPL", "wq matmul")
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def wq_matmul(x: jnp.ndarray, w, impl: Optional[str] = None) -> jnp.ndarray:
+    """``x @ w`` for a :class:`~repro.wq.packed.PackedLinear` ``w``.
+
+    ``x``: (…, d_in) activations; returns (…, d_out) in ``x.dtype``
+    (fp32 accumulation in both backends).  Stacked stores must be sliced
+    to their 2-D per-layer form first (the stack executor's scan does).
+    """
+    if w.codes.ndim != 2:
+        raise ValueError(
+            "matmul on a layer-stacked PackedLinear: slice the stack "
+            f"(codes ndim {w.codes.ndim}) to one layer first")
+    if x.shape[-1] != w.d_in:
+        raise ValueError(f"x feature dim {x.shape[-1]} != d_in {w.d_in}")
+    if w.perm is not None:
+        # act-order: gather activations into the storage channel order
+        x = jnp.take(x, w.perm, axis=-1)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, w.d_in)
+    impl = resolve_impl(impl)
+    if impl == "jnp":
+        y = ref.wq_matmul_ref(x2, w.codes, w.scales, w.mins,
+                              bits=w.bits, group=w.group, d_in=w.d_in)
+    else:
+        y = wq_kernel.matmul_pallas(x2, w.codes, w.scales, w.mins,
+                                    bits=w.bits, group=w.group,
+                                    d_in=w.d_in, interpret=_interpret())
+    return y.reshape(lead + (w.d_out,)).astype(x.dtype)

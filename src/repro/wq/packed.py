@@ -1,0 +1,151 @@
+"""``PackedLinear`` — a weight matrix stored as packed int codes.
+
+The serving stacks consume every projection weight the same structural
+way (``x @ p["w*"].astype(dt)``), so a weight store only has to satisfy
+that one contract to flow through the unmodified forward/decode code.
+``PackedLinear`` is a registered pytree node that does exactly that:
+
+* children: ``codes`` (uint8, the exact ``core.packing`` bitstream of the
+  int codes, packed along ``d_in`` *per output column* so a fused kernel
+  can unpack K-tiles), fp16 ``scales``/``mins`` (one affine pair per
+  ``(group, d_out)``), and an optional ``perm`` (int32 act-order storage
+  permutation of the input channels);
+* static aux: ``bits``, ``group``, ``d_in``, ``d_out``.
+
+Because it is a pytree node, a layer-stacked tree of them (children with
+a leading layer axis) scans through ``models/stack.py`` unchanged — the
+scan slices the children per layer and rebuilds the node — and
+``checkpoint.ckpt`` saves/restores the children bit-exactly through the
+ordinary path-keyed flatten.  ``astype`` is identity (the dequantized
+matmul follows the activation dtype), ``__rmatmul__`` defers to the
+``REPRO_WQ_IMPL``-dispatched packed dequant-matmul, so JAX arrays hand
+``x @ w`` over to us via the NotImplemented protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+__all__ = ["PackedLinear", "pack_weight_codes", "unpack_weight_codes"]
+
+
+def pack_weight_codes(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(d_in, d_out) uint8 codes -> (packed_size(d_in, bits), d_out) words.
+
+    Each output column's codes are packed independently down the input
+    axis (the exact ``core.packing`` bitstream per column), so a K-tile of
+    the packed array holds whole 8-code groups of every column in it.
+    """
+    per_col = jax.vmap(lambda c: packing.pack_bits(c, bits))
+    return per_col(codes.T).T
+
+
+def unpack_weight_codes(words: jnp.ndarray, bits: int,
+                        d_in: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_weight_codes`: -> (d_in, d_out) uint8."""
+    per_col = jax.vmap(lambda w: packing.unpack_bits(w, bits, d_in))
+    return per_col(words.T).T
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class PackedLinear:
+    """A ``(…, d_in, d_out)`` weight matrix served as packed int codes.
+
+    ``w_hat[perm[r], c] = codes[r, c] * scales[r // group, c] +
+    mins[r // group, c]`` (``perm`` identity when ``None``), with all
+    leading axes of the children treated as batch (layer / stage
+    stacking).  Matmul is only defined on the unstacked (2-D) form —
+    the stack executor's scan slices a stacked tree down to it.
+    """
+
+    codes: jnp.ndarray                 # (*batch, packed_rows, d_out) uint8
+    scales: jnp.ndarray                # (*batch, n_groups, d_out) fp16
+    mins: jnp.ndarray                  # (*batch, n_groups, d_out) fp16
+    perm: Optional[jnp.ndarray]        # (*batch, d_in) int32, or None
+    bits: int
+    group: int
+    d_in: int
+    d_out: int
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten_with_keys(self):
+        children = [(jax.tree_util.GetAttrKey("codes"), self.codes),
+                    (jax.tree_util.GetAttrKey("scales"), self.scales),
+                    (jax.tree_util.GetAttrKey("mins"), self.mins),
+                    (jax.tree_util.GetAttrKey("perm"), self.perm)]
+        aux = (self.bits, self.group, self.d_in, self.d_out)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, scales, mins, perm = children
+        bits, group, d_in, d_out = aux
+        return cls(codes=codes, scales=scales, mins=mins, perm=perm,
+                   bits=bits, group=group, d_in=d_in, d_out=d_out)
+
+    # -- the array-like surface the forward code touches -----------------
+    @property
+    def batch_shape(self) -> Tuple[int, ...]:
+        return tuple(self.codes.shape[:-2])
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.batch_shape + (self.d_in, self.d_out)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    def astype(self, dtype):
+        """Identity: the packed matmul output follows the activation
+        dtype, exactly like ``(w.astype(x.dtype))``'s result would."""
+        del dtype
+        return self
+
+    def __rmatmul__(self, x):
+        from repro.wq import ops
+        return ops.wq_matmul(x, self)
+
+    def __matmul__(self, other):  # pragma: no cover - guidance only
+        raise TypeError("PackedLinear is an x @ w weight store; "
+                        "w @ x is not supported")
+
+    # -- introspection ---------------------------------------------------
+    def packed_bytes(self) -> int:
+        """Physical weight-store bytes (codes + scale/min side info)."""
+        total = self.codes.size * self.codes.dtype.itemsize
+        total += self.scales.size * self.scales.dtype.itemsize
+        total += self.mins.size * self.mins.dtype.itemsize
+        if self.perm is not None:
+            total += self.perm.size * self.perm.dtype.itemsize
+        return total
+
+    def dequantize(self) -> jnp.ndarray:
+        """fp32 ``(…, d_in, d_out)`` in the ORIGINAL input-channel order.
+
+        Test/debug path (it materializes the dense matrix the packed
+        store exists to avoid); batch axes are vmapped.
+        """
+        if self.batch_shape:
+            flat = jax.tree_util.tree_map(
+                lambda a: a.reshape((-1,) + a.shape[len(self.batch_shape):]),
+                self)
+            dense = jax.vmap(lambda s: s.dequantize())(flat)
+            return dense.reshape(self.batch_shape + (self.d_in, self.d_out))
+        codes = unpack_weight_codes(self.codes, self.bits, self.d_in)
+        n_groups = self.scales.shape[-2]
+        pad = n_groups * self.group - self.d_in
+        cf = jnp.pad(codes.astype(jnp.float32), ((0, pad), (0, 0)))
+        cf = cf.reshape(n_groups, self.group, self.d_out)
+        w = cf * self.scales.astype(jnp.float32)[:, None, :] \
+            + self.mins.astype(jnp.float32)[:, None, :]
+        w = w.reshape(n_groups * self.group, self.d_out)[: self.d_in]
+        if self.perm is not None:
+            w = jnp.zeros_like(w).at[self.perm].set(w)
+        return w

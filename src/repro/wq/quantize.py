@@ -1,0 +1,299 @@
+"""RTN and GPTQ weight-only quantizers producing :class:`PackedLinear`.
+
+Both share one asymmetric affine grid per ``(group, d_out)``: ``w_hat =
+code * scale + min`` with the fp16-ROUNDED scale/min (the stored side
+info), so quantization error is measured against exactly what serving
+dequantizes.  ``group`` runs down ``d_in`` (the contraction axis — one
+scale per K-tile slice of the fused kernel); a ragged last group is
+handled exactly (its statistics cover only the real rows).
+
+* **RTN** (round-to-nearest): vectorized jnp, the zero-calibration
+  baseline.
+* **GPTQ** (Frantar et al.): per-column quantization with second-order
+  error compensation — after quantizing column ``j`` the residual error
+  is propagated into the not-yet-quantized columns through the Cholesky
+  factor of the inverse Hessian ``H = X^T X`` accumulated from a small
+  calibration sample (``repro.wq.calibrate``).  ``act_order=True``
+  processes columns by descending ``diag(H)`` — the same
+  importance-sorted channel permutation trick the adaptive wire uses
+  (``QuantConfig.channel_perm``) — and stores the permutation on the
+  ``PackedLinear`` so the matmul gathers activations into storage order.
+
+GPTQ runs in numpy: it is an offline, sequential-by-column calibration
+pass (not a jitted hot path), and numpy keeps it eager and debuggable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.tree import is_weight_site
+from repro.wq.packed import PackedLinear, pack_weight_codes
+
+__all__ = ["WqConfig", "parse_weight_quant", "rtn_quantize",
+           "gptq_quantize", "quantize_linear", "quantize_tree",
+           "quantize_params", "packed_tree_bytes", "QUANTIZED_SUBTREES"]
+
+#: params subtrees whose w* matmul sites the serving quantizer packs —
+#: the transformer block stacks.  Embed / connector / head / norms stay
+#: dense (the head is also a w*-named site but lives outside these).
+QUANTIZED_SUBTREES = ("client", "server", "shared_attn")
+
+_SUPPORTED_BITS = (2, 3, 4)
+
+
+@dataclasses.dataclass(frozen=True)
+class WqConfig:
+    """Weight-only serving quantization settings."""
+
+    bits: int = 4
+    group: int = 128
+    act_order: bool = False
+
+    def __post_init__(self):
+        if self.bits not in _SUPPORTED_BITS:
+            raise ValueError(f"wq bits must be in {_SUPPORTED_BITS}, "
+                             f"got {self.bits}")
+        if self.group < 8 or self.group % 8:
+            raise ValueError(f"wq group must be a positive multiple of 8 "
+                             f"(packed 8-code alignment), got {self.group}")
+
+
+def parse_weight_quant(weight_quant: str, *, group: int = 128,
+                       act_order: bool = False) -> WqConfig:
+    """``"int4" | "int3" | "int2"`` -> :class:`WqConfig`."""
+    names = {f"int{b}": b for b in _SUPPORTED_BITS}
+    if weight_quant not in names:
+        raise ValueError(f"unknown weight_quant {weight_quant!r}; "
+                         f"expected one of {sorted(names)}")
+    return WqConfig(bits=names[weight_quant], group=group,
+                    act_order=act_order)
+
+
+def _grid(wg: jnp.ndarray, mask: jnp.ndarray, bits: int):
+    """fp16-rounded (scale, min) of one group tensor (G, group, C)."""
+    big = jnp.float32(3.0e38)
+    mn = jnp.where(mask, wg, big).min(axis=1)
+    mx = jnp.where(mask, wg, -big).max(axis=1)
+    scale = (mx - mn) / (2 ** bits - 1)
+    scale = jnp.maximum(scale, 1e-8).astype(jnp.float16)
+    return scale, mn.astype(jnp.float16)
+
+
+def rtn_quantize(w: jnp.ndarray, cfg: WqConfig) -> PackedLinear:
+    """Round-to-nearest grouped quantization of a (d_in, d_out) matrix."""
+    d_in, d_out = w.shape
+    g = cfg.group
+    n_groups = -(-d_in // g)
+    pad = n_groups * g - d_in
+    wf = jnp.pad(w.astype(jnp.float32), ((0, pad), (0, 0)))
+    wg = wf.reshape(n_groups, g, d_out)
+    mask = (jnp.arange(n_groups * g).reshape(n_groups, g, 1) < d_in)
+    scale, mn = _grid(wg, mask, cfg.bits)
+    s32 = scale.astype(jnp.float32)[:, None, :]
+    m32 = mn.astype(jnp.float32)[:, None, :]
+    codes = jnp.clip(jnp.round((wg - m32) / s32), 0, 2 ** cfg.bits - 1)
+    codes = codes.reshape(-1, d_out)[:d_in].astype(jnp.uint8)
+    return PackedLinear(codes=pack_weight_codes(codes, cfg.bits),
+                        scales=scale, mins=mn, perm=None,
+                        bits=cfg.bits, group=g, d_in=d_in, d_out=d_out)
+
+
+def gptq_quantize(w: jnp.ndarray, hessian: np.ndarray,
+                  cfg: WqConfig) -> PackedLinear:
+    """GPTQ error-compensated quantization of a (d_in, d_out) matrix.
+
+    ``hessian``: (d_in, d_in) accumulated ``X^T X`` of the site's
+    calibration inputs.  Columns here are input channels (we work on the
+    (d_out, d_in) transpose, as GPTQ is row-wise in the out dimension).
+    """
+    d_in, d_out = w.shape
+    g = cfg.group
+    W = np.asarray(w, dtype=np.float32).T.copy()       # (d_out, d_in)
+    H = np.asarray(hessian, dtype=np.float64).copy()
+    if H.shape != (d_in, d_in):
+        raise ValueError(f"hessian shape {H.shape} != ({d_in}, {d_in})")
+
+    dead = np.diag(H) <= 0
+    if dead.any():
+        H[dead, dead] = 1.0
+        W[:, dead] = 0.0
+    perm = None
+    if cfg.act_order:
+        perm = np.argsort(-np.diag(H), kind="stable")
+        W = W[:, perm]
+        H = H[np.ix_(perm, perm)]
+    damp = 0.01 * float(np.mean(np.diag(H)))
+    H[np.diag_indices(d_in)] += max(damp, 1e-8)
+    # upper Cholesky factor U of H^-1 (H^-1 = U^T U): the standard GPTQ
+    # error propagator — column j's residual spreads to j+1.. via U[j, j+1:]
+    Hinv = np.linalg.inv(H)
+    U = np.linalg.cholesky(Hinv).T.astype(np.float32)
+
+    n_groups = -(-d_in // g)
+    qmax = 2 ** cfg.bits - 1
+    codes = np.zeros((d_out, d_in), np.uint8)
+    scales = np.zeros((n_groups, d_out), np.float16)
+    mins = np.zeros((n_groups, d_out), np.float16)
+    for b0 in range(0, d_in, g):
+        b1 = min(b0 + g, d_in)
+        gi = b0 // g
+        # grid from the error-COMPENSATED block values (the live W)
+        blk = W[:, b0:b1]
+        mn = blk.min(axis=1)
+        scale = np.maximum((blk.max(axis=1) - mn) / qmax, 1e-8)
+        scale16 = scale.astype(np.float16)
+        mn16 = mn.astype(np.float16)
+        scales[gi] = scale16
+        mins[gi] = mn16
+        s32 = scale16.astype(np.float32)
+        m32 = mn16.astype(np.float32)
+        err_blk = np.zeros((d_out, b1 - b0), np.float32)
+        for j in range(b0, b1):
+            col = W[:, j]
+            q = np.clip(np.rint((col - m32) / s32), 0, qmax)
+            codes[:, j] = q.astype(np.uint8)
+            dq = q * s32 + m32
+            err = (col - dq) / U[j, j]
+            if j + 1 < b1:
+                W[:, j + 1:b1] -= np.outer(err, U[j, j + 1:b1])
+            err_blk[:, j - b0] = err
+        if b1 < d_in:  # propagate the whole block's error past it
+            W[:, b1:] -= err_blk @ U[b0:b1, b1:]
+
+    pl_perm = None
+    if perm is not None:
+        pl_perm = jnp.asarray(perm.astype(np.int32))
+    return PackedLinear(
+        codes=pack_weight_codes(jnp.asarray(codes.T), cfg.bits),
+        scales=jnp.asarray(scales), mins=jnp.asarray(mins), perm=pl_perm,
+        bits=cfg.bits, group=cfg.group, d_in=d_in, d_out=d_out)
+
+
+def quantize_linear(w: jnp.ndarray, cfg: WqConfig,
+                    hessian: Optional[np.ndarray] = None) -> PackedLinear:
+    """One (…, d_in, d_out) site -> PackedLinear (GPTQ iff ``hessian``).
+
+    Leading batch axes (layer stacking) are quantized independently and
+    restacked; a stacked ``hessian`` must carry the same leading axes.
+    """
+    if w.ndim == 2:
+        if hessian is None:
+            return rtn_quantize(w, cfg)
+        return gptq_quantize(w, np.asarray(hessian), cfg)
+    lead = w.shape[:-2]
+    flat = np.prod(lead, dtype=int)
+    wf = w.reshape((flat,) + w.shape[-2:])
+    hf = None
+    if hessian is not None:
+        hessian = np.asarray(hessian)
+        if hessian.shape[:-2] != lead:
+            raise ValueError(f"hessian batch {hessian.shape[:-2]} != "
+                             f"site batch {lead}")
+        hf = hessian.reshape((flat,) + hessian.shape[-2:])
+    parts = [quantize_linear(wf[i], cfg, None if hf is None else hf[i])
+             for i in range(flat)]
+    if any((p.perm is None) != (parts[0].perm is None) for p in parts):
+        raise AssertionError("inconsistent act-order across batch")
+
+    def restack(*leaves):
+        return jnp.stack(leaves).reshape(lead + leaves[0].shape)
+
+    return jax.tree_util.tree_map(restack, parts[0], *parts[1:])
+
+
+def _site_ok(leaf, stacked_axes: int) -> bool:
+    """Only ``@``-consumed matmul sites are packable: per-layer 2-D
+    matrices.  MoE expert banks (per-layer 3-D, consumed via einsum)
+    stay dense — their bandwidth needs an einsum-aware kernel."""
+    return getattr(leaf, "ndim", 0) == stacked_axes + 2
+
+
+def quantize_tree(tree, cfg: WqConfig, *, stacked_axes: int = 1,
+                  hessians: Optional[Dict] = None,
+                  prefix: Tuple[str, ...] = ()):
+    """Replace every packable w* site of a (nested-dict) param tree.
+
+    ``stacked_axes``: leading layer axes on every site (1 for the
+    ``client``/``server`` segment stacks, 0 for the unstacked
+    ``shared_attn`` block, 2 for stage-stacked hub trees).
+    ``hessians``: full-path-keyed ``{path: X^T X}`` from
+    :func:`repro.wq.calibrate.collect_hessians`; sites without an entry
+    fall back to RTN.  Returns ``(quantized_tree, report)`` where report
+    maps site paths to ``(dense_bytes, packed_bytes)``.
+    """
+    report: Dict[Tuple[str, ...], Tuple[int, int]] = {}
+
+    def walk(node, path):
+        if not isinstance(node, dict):
+            raise TypeError(f"expected nested dicts at {path}, "
+                            f"got {type(node)}")
+        out = {}
+        for k, v in node.items():
+            if isinstance(v, dict):
+                out[k] = walk(v, path + (k,))
+            elif is_weight_site(k, v) and _site_ok(v, stacked_axes):
+                h = (hessians or {}).get(path + (k,))
+                q = quantize_linear(v, cfg, h)
+                report[path + (k,)] = (v.size * v.dtype.itemsize,
+                                       q.packed_bytes())
+                out[k] = q
+            else:
+                out[k] = v
+        return out
+
+    return walk(tree, prefix), report
+
+
+def quantize_params(params: Dict, cfg: WqConfig,
+                    hessians: Optional[Dict] = None) -> Tuple[Dict, Dict]:
+    """Quantize a full model param tree's serving block stacks.
+
+    Packs the w* matmul sites of ``client``/``server`` (layer-stacked)
+    and ``shared_attn`` (unstacked); everything else — embed, connector,
+    head, norms, codec — is returned untouched.  Returns
+    ``(params, report)``.
+    """
+    out = dict(params)
+    report: Dict = {}
+    for side in ("client", "server"):
+        if side in params:
+            out[side], rep = quantize_tree(params[side], cfg,
+                                           stacked_axes=1,
+                                           hessians=hessians,
+                                           prefix=(side,))
+            report.update(rep)
+    if "shared_attn" in params:
+        out["shared_attn"], rep = quantize_tree(params["shared_attn"], cfg,
+                                                stacked_axes=0,
+                                                hessians=hessians,
+                                                prefix=("shared_attn",))
+        report.update(rep)
+    if not report:
+        raise ValueError("no packable w* matmul sites found in params")
+    return out, report
+
+
+def packed_tree_bytes(tree) -> int:
+    """Physical weight bytes of a (possibly partially) packed tree."""
+    total = 0
+    seen = set()
+
+    def visit(node):
+        nonlocal total
+        if isinstance(node, PackedLinear):
+            if id(node) not in seen:
+                seen.add(id(node))
+                total += node.packed_bytes()
+        elif isinstance(node, dict):
+            for v in node.values():
+                visit(v)
+        elif hasattr(node, "dtype"):
+            total += node.size * node.dtype.itemsize
+
+    visit(tree)
+    return total

@@ -1,0 +1,305 @@
+"""Weight-only serving quantization (repro.wq): packing errors, the
+shared structural site rule, fused-kernel parity vs the jnp oracle,
+GPTQ-vs-RTN held-out fidelity, bit-exact packed checkpoints, the
+quantized ServeEngine, and the hub's quantized server stage."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import wq
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.core import packing
+from repro.core import split_stage as ss
+from repro.data.pipeline import make_pipeline
+from repro.kernels import ref, wq_kernel
+from repro.models import transformer as tf
+from repro.peft import lora_sites
+from repro.serve.engine import ServeEngine
+from repro.utils.tree import weight_sites
+
+
+def _cfg():
+    return get_config("tinyllava").reduced()
+
+
+# ---------------------------------------------------------------------------
+# satellite: core.packing ragged-tail hardening
+# ---------------------------------------------------------------------------
+
+def test_unpack_bits_exact_ragged_tail_roundtrip():
+    for n, bits in ((13, 3), (100, 4), (7, 2), (8, 5)):
+        codes = jnp.arange(n, dtype=jnp.uint8) % (1 << bits)
+        flat = packing.pack_bits(codes, bits)
+        assert flat.shape[0] == packing.packed_size(n, bits)
+        out = packing.unpack_bits(flat, bits, n)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+
+def test_unpack_bits_rejects_short_stream():
+    codes = jnp.arange(100, dtype=jnp.uint8) % 8
+    flat = packing.pack_bits(codes, 3)
+    with pytest.raises(ValueError, match="zero-fill"):
+        packing.unpack_bits(flat[:-1], 3, 100)
+
+
+def test_unpack_bits_rejects_oversized_stream():
+    with pytest.raises(ValueError):
+        packing.unpack_bits(jnp.zeros(1000, jnp.uint8), 3, 16)
+
+
+# ---------------------------------------------------------------------------
+# satellite: one structural site rule shared by peft and wq
+# ---------------------------------------------------------------------------
+
+def test_peft_and_wq_select_identical_sites():
+    params = tf.init_params(jax.random.PRNGKey(0), _cfg())
+    for sub in ("client", "server"):
+        peft_paths = [p for p, _ in lora_sites(params[sub])]
+        wq_paths = [p for p, _ in weight_sites(params[sub])]
+        assert peft_paths == wq_paths and peft_paths
+
+
+# ---------------------------------------------------------------------------
+# kernel parity: fused Pallas dequant-matmul vs jnp oracle vs dense
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits,group,d_in,d_out",
+                         [(4, 128, 256, 384), (3, 32, 256, 130),
+                          (4, 32, 100, 128), (2, 32, 64, 96)])
+def test_fused_matmul_matches_oracle_and_dense(bits, group, d_in, d_out):
+    cfg = wq.WqConfig(bits=bits, group=group)
+    w = jax.random.normal(jax.random.PRNGKey(0), (d_in, d_out)) * 0.3
+    packed = wq.rtn_quantize(w, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (9, d_in))
+    y_jnp = wq.wq_matmul(x, packed, impl="jnp")
+    y_pl = wq.wq_matmul(x, packed, impl="pallas")
+    y_dense = x @ packed.dequantize().astype(x.dtype)
+    np.testing.assert_allclose(np.asarray(y_jnp), np.asarray(y_pl),
+                               atol=1e-4, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_jnp), np.asarray(y_dense),
+                               atol=1e-4, rtol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [4, 3])
+def test_fused_matmul_act_order_parity(bits):
+    d_in, d_out = 128, 96
+    cfg = wq.WqConfig(bits=bits, group=32, act_order=True)
+    w = jax.random.normal(jax.random.PRNGKey(0), (d_in, d_out)) * 0.3
+    X = jax.random.normal(jax.random.PRNGKey(1), (256, d_in))
+    H = np.asarray(X.T @ X)
+    packed = wq.gptq_quantize(w, H, cfg)
+    assert packed.perm is not None
+    x = jax.random.normal(jax.random.PRNGKey(2), (5, d_in))
+    y_jnp = wq.wq_matmul(x, packed, impl="jnp")
+    y_pl = wq.wq_matmul(x, packed, impl="pallas")
+    y_dense = x @ packed.dequantize().astype(x.dtype)  # original order
+    np.testing.assert_allclose(np.asarray(y_jnp), np.asarray(y_pl),
+                               atol=1e-4, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_jnp), np.asarray(y_dense),
+                               atol=1e-4, rtol=1e-5)
+
+
+def test_oracle_unpack_matches_core_packing():
+    # the per-column bitstream IS core.packing's exact stream
+    d_in, bits = 100, 3
+    codes = jax.random.randint(jax.random.PRNGKey(0), (d_in, 5), 0,
+                               1 << bits).astype(jnp.uint8)
+    from repro.wq.packed import pack_weight_codes
+    words = pack_weight_codes(codes, bits)
+    col = packing.pack_bits(codes[:, 2], bits)
+    np.testing.assert_array_equal(np.asarray(words[:, 2]), np.asarray(col))
+    back = ref.wq_unpack_ref(words, bits, d_in)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+def test_matmul_rejects_stacked_and_mismatched():
+    cfg = wq.WqConfig(bits=4, group=32)
+    w = jax.random.normal(jax.random.PRNGKey(0), (2, 64, 32))
+    stacked = wq.quantize_linear(w, cfg)
+    with pytest.raises(ValueError, match="stacked"):
+        wq.wq_matmul(jnp.zeros((3, 64)), stacked)
+    flat = wq.quantize_linear(w[0], cfg)
+    with pytest.raises(ValueError, match="feature dim"):
+        wq.wq_matmul(jnp.zeros((3, 65)), flat)
+
+
+# ---------------------------------------------------------------------------
+# GPTQ error compensation: held-out improvement over RTN
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [4, 3])
+def test_gptq_beats_rtn_on_heldout_reconstruction(bits):
+    # correlated inputs (trained nets' anisotropic feature spectra) are
+    # where Hessian compensation pays; held-out split guards against
+    # calibration overfit
+    d_in, d_out = 128, 96
+    A = jax.random.normal(jax.random.PRNGKey(0), (d_in, d_in)) * 0.15
+    Xc = jax.random.normal(jax.random.PRNGKey(1), (2048, d_in)) @ A
+    Xh = jax.random.normal(jax.random.PRNGKey(2), (512, d_in)) @ A
+    w = jax.random.normal(jax.random.PRNGKey(3), (d_in, d_out)) * 0.3
+    cfg = wq.WqConfig(bits=bits, group=32)
+    H = np.asarray(Xc.T @ Xc)
+
+    def heldout_err(p):
+        return float(jnp.linalg.norm(Xh @ (p.dequantize() - w)))
+
+    e_rtn = heldout_err(wq.rtn_quantize(w, cfg))
+    e_gptq = heldout_err(wq.gptq_quantize(w, H, cfg))
+    assert e_gptq < 0.85 * e_rtn, (e_gptq, e_rtn)
+
+
+def test_gptq_model_level_heldout_kl_beats_rtn():
+    cfg = _cfg()
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    # power-law feature spectrum (random init is white, which makes GPTQ
+    # degenerate to RTN by construction — the compensation term is zero
+    # in expectation under an isotropic Hessian)
+    d = cfg.d_model
+    col = (1.0 / jnp.sqrt(1.0 + jnp.arange(d, dtype=jnp.float32))) * 3.0
+    scale = lambda x: x * col if getattr(x, "ndim", 0) >= 1 and \
+        x.shape[-1] == d else x  # noqa: E731
+    for k in ("embed", "connector"):
+        params[k] = jax.tree_util.tree_map(scale, params[k])
+
+    calib = next(make_pipeline(cfg, 16, 64))
+    held = next(make_pipeline(cfg, 4, 48, seed=123))
+    hessians = wq.collect_hessians(params, cfg, calib)
+    wcfg = wq.parse_weight_quant("int3", group=32)
+    gq, _ = wq.quantize_params(params, wcfg, hessians=hessians)
+    rt, _ = wq.quantize_params(params, wcfg)
+
+    ld, _ = tf.forward(params, cfg, held)
+    pd = jax.nn.log_softmax(ld.astype(jnp.float32))
+
+    def kl(qp):
+        lq, _ = tf.forward(qp, cfg, held)
+        pq = jax.nn.log_softmax(lq.astype(jnp.float32))
+        return float((jnp.exp(pd) * (pd - pq)).sum(-1).mean())
+
+    k_gptq, k_rtn = kl(gq), kl(rt)
+    assert k_gptq < k_rtn, (k_gptq, k_rtn)
+
+
+# ---------------------------------------------------------------------------
+# packed checkpoint roundtrip (bit-exact)
+# ---------------------------------------------------------------------------
+
+def test_packed_checkpoint_roundtrip_bit_exact(tmp_path):
+    cfg = _cfg()
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    wcfg = wq.parse_weight_quant("int4", group=128, act_order=True)
+    calib = next(make_pipeline(cfg, 2, 16))
+    hs = wq.collect_hessians(params, cfg, calib)
+    qp, _ = wq.quantize_params(params, wcfg, hessians=hs)
+
+    path = str(tmp_path / "wq.npz")
+    ckpt.save(path, qp)
+    back = ckpt.restore(path, jax.tree_util.tree_map(jnp.zeros_like, qp))
+
+    flat_a = jax.tree_util.tree_flatten_with_path(qp)[0]
+    flat_b = jax.tree_util.tree_flatten_with_path(back)[0]
+    assert len(flat_a) == len(flat_b)
+    for (pa, a), (pb, b) in zip(flat_a, flat_b):
+        assert pa == pb
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # structure survives too: packed stores are still PackedLinear
+    stores = jax.tree_util.tree_leaves(
+        back["server"], is_leaf=lambda x: isinstance(x, wq.PackedLinear))
+    assert any(isinstance(s, wq.PackedLinear) for s in stores)
+    site = back["server"]["seg0"]["attn"]["wq"]
+    assert isinstance(site, wq.PackedLinear) and site.perm is not None
+
+
+# ---------------------------------------------------------------------------
+# quantized ServeEngine: token-level KL bound vs the dense engine
+# ---------------------------------------------------------------------------
+
+class _LogitTap(ServeEngine):
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.picked = []
+
+    def _pick(self, last_logits):
+        self.picked.append(np.array(last_logits, np.float32))
+        return super()._pick(last_logits)
+
+
+def test_engine_int4_prefill_kl_bounded():
+    cfg = _cfg()
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    b, p, n_new, pg = 8, 16, 2, 8
+    n_pages = 1 + b * (-(-(cfg.n_image_tokens + p + n_new) // pg))
+    calib = next(make_pipeline(cfg, 8, 32))
+    # serve requests drawn from the calibration distribution (in-domain
+    # prompts — what a real deployment quantizes for)
+    req = next(make_pipeline(cfg, b, p, seed=9))
+    toks = np.asarray(req["tokens"])
+    imgs = np.asarray(req["image_embeds"], np.float32)
+
+    def run(**kw):
+        eng = _LogitTap(params, cfg, n_slots=b, page_size=pg,
+                        n_pages=n_pages, **kw)
+        for i in range(b):
+            eng.submit(list(toks[i]), max_new=n_new, image_embeds=imgs[i])
+        eng.run()
+        return eng
+
+    dense = run()
+    quant = run(weight_quant="int4", wq_calib=calib)
+    assert quant.stats["weight_bytes_packed"] * 3.7 <= \
+        quant.stats["weight_bytes_dense"]
+    # both engines admit all b requests in one prefill batch, so the
+    # first _pick sees the same prompts — compare those token-level
+    # distributions (decode ticks diverge once sampled tokens differ)
+    ld, lq = dense.picked[0], quant.picked[0]
+    assert ld.shape == lq.shape == (b, cfg.vocab_size)
+    pd = jax.nn.log_softmax(jnp.asarray(ld))
+    pq = jax.nn.log_softmax(jnp.asarray(lq))
+    kl = float((jnp.exp(pd) * (pd - pq)).sum(-1).mean())
+    # ~0.13 measured across seeds at int4/g128 on the random-init reduced
+    # model (single next-token position, the sharpest comparison); dense
+    # vs dense is exactly 0 and int3 lands several times higher
+    assert 0.0 <= kl < 0.3, kl
+
+
+# ---------------------------------------------------------------------------
+# hub: quantized shared server stage for inference-only clients
+# ---------------------------------------------------------------------------
+
+def test_hub_quantized_server_stage_ce_close():
+    cfg = _cfg()
+    n_clients = 2
+    sp = ss.init_stage_params(jax.random.PRNGKey(0), cfg, n_clients + 1,
+                              per_stage=cfg.n_layers // 2)
+    server = ss.hub_programs(cfg, n_clients)[-1]
+    qblocks, report = ss.quantized_stage_blocks(sp, server, "int4",
+                                                group=128)
+    assert report and all(p < d for d, p in report.values())
+    dense = jax.tree_util.tree_map(lambda v: v[server.index], sp["blocks"])
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, cfg.d_model)) * 0.4
+    pos = jnp.arange(24, dtype=jnp.int32)
+    labels = jax.random.randint(jax.random.PRNGKey(2), (2, 24), 0,
+                                cfg.vocab_size)
+    h_d = ss.run_blocks(cfg, dense, x, pos)
+    h_q = ss.run_blocks(cfg, qblocks, x, pos)
+    ce_d = float(ss.head_ce(cfg, sp, h_d, labels))
+    ce_q = float(ss.head_ce(cfg, sp, h_q, labels))
+    assert abs(ce_d - ce_q) < 0.1, (ce_d, ce_q)
+
+
+# ---------------------------------------------------------------------------
+# config parsing / validation
+# ---------------------------------------------------------------------------
+
+def test_parse_weight_quant_and_validation():
+    c = wq.parse_weight_quant("int3", group=32, act_order=True)
+    assert dataclasses.astuple(c) == (3, 32, True)
+    with pytest.raises(ValueError):
+        wq.parse_weight_quant("int9")
+    with pytest.raises(ValueError):
+        wq.WqConfig(bits=4, group=12)  # not a multiple of 8
